@@ -1,0 +1,29 @@
+"""Paper Fig 4: work-sharing throughput, Dstream + Lstream, all five
+architecture variants across the consumer sweep. 'derived' carries the
+paper's quoted values where the text gives one."""
+
+from benchmarks.common import sim_cell, thr_row
+
+# paper-quoted targets (msgs/s): {(arch, workload, consumers): value}
+PAPER = {
+    ("prs-haproxy", "dstream", 1): 6300,
+    ("dts", "dstream", 64): 39000,
+    ("prs-haproxy", "dstream", 4): 19000,
+    ("mss", "dstream", 64): 14000,
+    ("dts", "lstream", 64): 685,
+    ("mss", "lstream", 64): 256,
+}
+
+ARCHS = ("dts", "prs-haproxy", "prs-haproxy-c4", "prs-stunnel", "mss")
+SWEEP = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(cache):
+    rows = []
+    for wl, msgs in (("dstream", 4096), ("lstream", 2048)):
+        for arch in ARCHS:
+            for nc in SWEEP:
+                cell = sim_cell(cache, "work_sharing", arch, wl, nc, msgs)
+                rows.append(thr_row(f"fig4/{wl}/{arch}/c{nc}", cell,
+                                    PAPER.get((arch, wl, nc))))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig 5: RTT CDFs under feedback. Validates the quoted CDF claims:
+'for 64 consumers PRS keeps 80% of message RTTs under 0.7 s (Dstream) and
+12.5 s (Lstream)'."""
+
+from benchmarks.common import sim_cell
+
+
+def run(cache):
+    rows = []
+    d = sim_cell(cache, "feedback", "prs-haproxy", "dstream", 64, 3072)
+    f = (d.get("frac_under") or {}).get("0.7")
+    rows.append(("fig5/dstream/prs/frac<0.7s@64", 0.0,
+                 f"{(f or 0) * 100:.0f}% (paper: 80%)"))
+    l = sim_cell(cache, "feedback", "prs-haproxy", "lstream", 64, 1536)
+    f2 = (l.get("frac_under") or {}).get("12.5")
+    rows.append(("fig5/lstream/prs/frac<12.5s@64", 0.0,
+                 f"{(f2 or 0) * 100:.0f}% (paper: 80%)"))
+    # rightward shift beyond 8 consumers (all archs)
+    for arch in ("dts", "prs-haproxy", "mss"):
+        a = sim_cell(cache, "feedback", arch, "dstream", 8, 3072)
+        b = sim_cell(cache, "feedback", arch, "dstream", 64, 3072)
+        shift = (b["p95_rtt"] or 0) / max(a["p95_rtt"] or 1e-9, 1e-9)
+        rows.append((f"fig5/dstream/{arch}/p95shift_8to64", 0.0,
+                     f"p95 x{shift:.1f} (paper: rightward shift)"))
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Fig 6: median RTT under work sharing with feedback (Dstream +
+Lstream). PRS-Stunnel excluded as in the paper (poor earlier results)."""
+
+from benchmarks.common import rtt_row, sim_cell
+
+PAPER_S = {
+    ("mss", "lstream", 64): 40.0,       # severe bottleneck @64
+    ("mss", "dstream", 64): 1.8,
+}
+ARCHS = ("dts", "prs-haproxy", "mss")
+SWEEP = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(cache):
+    rows = []
+    for wl, msgs in (("dstream", 3072), ("lstream", 1536)):
+        for arch in ARCHS:
+            for nc in SWEEP:
+                cell = sim_cell(cache, "feedback", arch, wl, nc, msgs)
+                rows.append(rtt_row(f"fig6/{wl}/{arch}/c{nc}", cell,
+                                    PAPER_S.get((arch, wl, nc))))
+    return rows

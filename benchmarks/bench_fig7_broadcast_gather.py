@@ -1,0 +1,22 @@
+"""Paper Fig 7: (a) broadcast throughput and (b) broadcast+gather median
+RTT for the generic 4 MiB workload."""
+
+from benchmarks.common import rtt_row, sim_cell, thr_row
+
+PAPER_THR = {("mss", 8): 110.0, ("mss", 64): 110.0}
+SWEEP = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(cache):
+    rows = []
+    for arch in ("dts", "prs-haproxy", "mss"):
+        for nc in SWEEP:
+            cell = sim_cell(cache, "broadcast", arch, "generic", nc, 384)
+            rows.append(thr_row(f"fig7a/{arch}/c{nc}", cell,
+                                PAPER_THR.get((arch, nc))))
+    for arch in ("dts", "prs-haproxy", "mss"):
+        for nc in (1, 2, 4, 8, 16, 32):
+            cell = sim_cell(cache, "broadcast_gather", arch, "generic", nc,
+                            384)
+            rows.append(rtt_row(f"fig7b/{arch}/c{nc}", cell))
+    return rows

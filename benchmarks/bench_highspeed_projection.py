@@ -1,0 +1,30 @@
+"""Paper §6 projection: the same experiments once the DSNs' 100 Gbps NICs
+become usable (and clients get 10 Gbps) — quantifies how far the 1 Gbps
+links constrain every architecture today."""
+
+from repro.core.ds2hpc import ClusterInventory
+from repro.core.metrics import summarize
+from repro.core.patterns import run_pattern
+
+
+def run(cache):
+    def cell(key, arch, inv):
+        def compute():
+            r = run_pattern("work_sharing", arch, "dstream", 16,
+                            total_messages=4096, n_runs=1,
+                            inventory=inv)[0]
+            s = summarize(r)
+            return {"feasible": r.feasible, "throughput": s.throughput_msgs_s}
+        return cache.get_or(key, compute)
+
+    rows = []
+    base = ClusterInventory()
+    fast = base.highspeed()
+    for arch in ("dts", "prs-haproxy", "mss"):
+        b = cell(f"hs/base/{arch}", arch, base)
+        f = cell(f"hs/fast/{arch}", arch, fast)
+        gain = f["throughput"] / max(b["throughput"], 1e-9)
+        rows.append((f"highspeed/{arch}/c16", 1e6 / f["throughput"],
+                     f"{b['throughput']:.0f} -> {f['throughput']:.0f} msg/s "
+                     f"(x{gain:.1f} with 100G DSNs)"))
+    return rows

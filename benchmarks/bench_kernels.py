@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: wall time of the interpret-mode Pallas kernels
+vs their jnp oracles (CPU; correctness-oriented — real perf is the TPU
+target) + analytic MXU utilization of the chosen BlockSpecs."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(cache):
+    def compute():
+        k = jax.random.key(0)
+        B, S, H, hd = 1, 512, 4, 64
+        q = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+        kv = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+        pos = jnp.arange(S)
+        rows = []
+        us_k = _time(lambda a, b, c: ops.flash_attention(
+            a, b, c, pos, pos, block_q=128, block_k=128), q, kv, kv)
+        us_r = _time(lambda a, b, c: ref.flash_attention_ref(
+            a, b, c, pos, pos), q, kv, kv)
+        rows.append(["kernels/flash_attention/interp", us_k,
+                     f"oracle={us_r:.0f}us blocks=128x128 "
+                     f"vmem~{(128 * hd * 3 + 128 * 128) * 4 / 1024:.0f}KiB"])
+        qd = jax.random.normal(k, (2, H, hd), jnp.float32)
+        cache_ = jax.random.normal(k, (2, 1024, H, hd), jnp.float32)
+        posd = jnp.array([800, 900], jnp.int32)
+        us_k = _time(lambda a: ops.flash_decode(a, cache_, cache_, posd,
+                                                block_k=128), qd)
+        rows.append(["kernels/flash_decode/interp", us_k, "block_k=128"])
+        x = jax.random.normal(k, (4096, 512), jnp.bfloat16)
+        w = jax.random.normal(k, (512,), jnp.float32) * 0.1
+        us_k = _time(lambda a: ops.rmsnorm(a, w, block_rows=256), x)
+        rows.append(["kernels/rmsnorm/interp", us_k, "block_rows=256"])
+        st = jax.random.normal(k, (2, 8, 4, 16, 32), jnp.float32)
+        tot = -jnp.abs(jax.random.normal(k, (2, 8, 4)))
+        C = jax.random.normal(k, (2, 8, 64, 32), jnp.float32)
+        cum = -jnp.abs(jax.random.normal(k, (2, 8, 64, 4)))
+        us_k = _time(lambda a: ops.ssd_state_scan(a, tot, C, cum), st)
+        rows.append(["kernels/ssd_state_scan/interp", us_k,
+                     "fused inter-chunk recurrence"])
+        return rows
+    return [tuple(r) for r in cache.get_or("kernels/micro", compute)]

@@ -1,0 +1,34 @@
+"""Beyond-paper: throughput vs payload size per architecture (the paper
+fixes three sizes; sweeping exposes each architecture's per-message
+overhead vs bandwidth crossover — where PRS's proxy CPU cost stops
+mattering and MSS's ingress byte-cap takes over)."""
+
+import dataclasses
+
+from repro.core.metrics import summarize
+from repro.core.patterns import run_pattern
+from repro.core.workloads import DSTREAM
+
+SIZES_KIB = (4, 16, 64, 256, 1024)
+
+
+def run(cache):
+    rows = []
+    for arch in ("dts", "prs-haproxy", "mss"):
+        for kib in SIZES_KIB:
+            key = f"psweep/{arch}/{kib}KiB"
+
+            def compute(kib=kib, arch=arch):
+                wl = dataclasses.replace(
+                    DSTREAM, name=f"sweep{kib}", payload_bytes=kib * 1024)
+                r = run_pattern("work_sharing", arch, wl, 8,
+                                total_messages=2048, n_runs=1)[0]
+                s = summarize(r)
+                return {"throughput": s.throughput_msgs_s,
+                        "gbps": s.goodput_gbps}
+
+            cell = cache.get_or(key, compute)
+            rows.append((key, 1e6 / max(cell["throughput"], 1e-9),
+                         f"thr={cell['throughput']:.0f}msg/s "
+                         f"goodput={cell['gbps']:.2f}Gbps"))
+    return rows

@@ -1,0 +1,35 @@
+"""§Roofline: per (arch x shape) terms from the dry-run artifact
+(results/dryrun.json, single-pod mesh). One row per baseline cell; the
+'derived' column packs the three terms + dominant bottleneck + the
+useful-compute ratio."""
+
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+
+def run(cache):
+    rows = []
+    if not os.path.exists(DRYRUN):
+        return [("roofline/missing", float("nan"),
+                 "run repro.launch.dryrun first")]
+    with open(DRYRUN) as f:
+        data = json.load(f)
+    for key, rec in sorted(data.items()):
+        if rec.get("mesh") != "single" or not rec.get("ok"):
+            continue
+        rl = rec["roofline"]
+        rows.append((
+            f"roofline/{rec['arch']}/{rec['shape']}",
+            rl["bound_step_s"] * 1e6,
+            f"comp={rl['compute_s']:.3f}s mem={rl['memory_s']:.3f}s "
+            f"coll={rl['collective_s']:.3f}s dom={rl['dominant'][:-2]} "
+            f"useful={rl['useful_compute_ratio']:.2f} "
+            f"frac={rl['roofline_fraction']:.3f}"))
+    n_multi = sum(1 for r in data.values()
+                  if r.get("mesh") == "multi" and r.get("ok"))
+    rows.append(("roofline/multi_pod_cells_ok", 0.0,
+                 f"{n_multi} multi-pod cells compiled"))
+    return rows

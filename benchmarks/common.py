@@ -1,0 +1,93 @@
+"""Shared benchmark machinery: disk-cached simulator runs + CSV rows.
+
+Row contract (benchmarks/run.py prints ``name,us_per_call,derived``):
+  name        - benchmark cell id
+  us_per_call - microseconds per *message* (1e6 / throughput) for
+                throughput cells, or median RTT in us for latency cells
+  derived     - paper reference value + deviation, or the measured
+                secondary quantity
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable
+
+from repro.core.metrics import rtt_fraction_under, summarize
+from repro.core.patterns import run_pattern
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "bench_cache.json")
+
+
+class Cache:
+    def __init__(self, path: str = CACHE_PATH):
+        self.path = os.path.abspath(path)
+        self.data: dict = {}
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                self.data = json.load(f)
+
+    def get_or(self, key: str, fn: Callable[[], dict]) -> dict:
+        if key not in self.data:
+            self.data[key] = fn()
+            self.save()
+        return self.data[key]
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(self.path), exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump(self.data, f, indent=1)
+
+
+def sim_cell(cache: Cache, pattern: str, arch: str, workload: str,
+             nc: int, msgs: int, n_runs: int = 1, **params) -> dict:
+    key = f"{pattern}|{arch}|{workload}|{nc}|{msgs}|{n_runs}|" + \
+        ",".join(f"{k}={v}" for k, v in sorted(params.items()))
+
+    def compute() -> dict:
+        rs = run_pattern(pattern, arch, workload, nc, total_messages=msgs,
+                         n_runs=n_runs, **params)
+        r = rs[0]
+        if not r.feasible:
+            return {"feasible": False, "reason": r.infeasible_reason}
+        s = summarize(r)
+        import numpy as np
+        meds = [summarize(x).median_rtt_s for x in rs]
+        thrs = [summarize(x).throughput_msgs_s for x in rs]
+        return {
+            "feasible": True,
+            "throughput": float(np.nanmean(thrs)),
+            "median_rtt": float(np.nanmean(meds)) if r.rtts.size else None,
+            "min_rtt": s.min_rtt_s if r.rtts.size else None,
+            "p95_rtt": s.p95_rtt_s if r.rtts.size else None,
+            "frac_under": {
+                str(t): rtt_fraction_under(r, t)
+                for t in (0.7, 5.0, 12.5)} if r.rtts.size else None,
+            "goodput_gbps": s.goodput_gbps,
+            "rejected": s.rejected,
+        }
+
+    return cache.get_or(key, compute)
+
+
+def thr_row(name: str, cell: dict, paper: float | None = None):
+    if not cell.get("feasible"):
+        return (name, float("nan"), "INFEASIBLE:" + cell.get("reason", "")[:40])
+    t = cell["throughput"]
+    us = 1e6 / t if t else float("nan")
+    if paper:
+        dev = 100.0 * (t - paper) / paper
+        return (name, us, f"thr={t:.0f}msg/s paper={paper:.0f} dev={dev:+.0f}%")
+    return (name, us, f"thr={t:.0f}msg/s")
+
+
+def rtt_row(name: str, cell: dict, paper_s: float | None = None):
+    if not cell.get("feasible"):
+        return (name, float("nan"), "INFEASIBLE")
+    m = cell["median_rtt"]
+    if paper_s:
+        dev = 100.0 * (m - paper_s) / paper_s
+        return (name, m * 1e6, f"rtt={m * 1e3:.0f}ms paper={paper_s * 1e3:.0f}ms dev={dev:+.0f}%")
+    return (name, m * 1e6, f"rtt={m * 1e3:.0f}ms")

@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.json. Usage:
+
+  PYTHONPATH=src python -m benchmarks.report [results/dryrun.json]
+"""
+
+import json
+import sys
+
+
+def gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}m"
+    return f"{x * 1e6:.0f}u"
+
+
+def roofline_table(data) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | coll_s | dominant | "
+        "useful | frac | mem_floor_s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    recs = [r for r in data.values()
+            if r.get("mesh") == "single" and r.get("ok")
+            and not r.get("tag")]
+    recs.sort(key=lambda r: (r["arch"], order.index(r["shape"])))
+    for r in recs:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"{rl['dominant'][:-2]} | {rl['useful_compute_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | "
+            f"{fmt_s(rl.get('memory_floor_s', 0))} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(data) -> str:
+    lines = [
+        "| arch | shape | mesh | devs | arg GiB/dev | temp GiB/dev | "
+        "fits 16GiB | AG/AR/RS/A2A/CP (count) | coll GiB/dev | compile_s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    recs = [r for r in data.values() if r.get("ok") and not r.get("tag")]
+    recs.sort(key=lambda r: (r["arch"], order.index(r["shape"]),
+                             r["mesh"]))
+    for r in recs:
+        m = r.get("memory", {})
+        arg = m.get("argument_bytes", 0)
+        tmp = m.get("temp_bytes", 0)
+        fits = "Y" if (arg + tmp) < 16 * 2**30 else "OVER"
+        c = r.get("collectives", {})
+        counts = "/".join(str(c.get(k, {}).get("count", 0)) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        cbytes = sum(v.get("bytes", 0) for v in c.values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['devices']} | "
+            f"{gib(arg)} | {gib(tmp)} | {fits} | {counts} | {gib(cbytes)} | "
+            f"{r['timings']['compile_s']} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    with open(path) as f:
+        data = json.load(f)
+    n_ok = sum(1 for r in data.values() if r.get("ok"))
+    n_single = sum(1 for r in data.values()
+                   if r.get("ok") and r.get("mesh") == "single")
+    n_multi = sum(1 for r in data.values()
+                  if r.get("ok") and r.get("mesh") == "multi")
+    print(f"## Dry-run summary: {n_ok} cells OK "
+          f"({n_single} single-pod, {n_multi} multi-pod)\n")
+    print("### §Dry-run (memory + collective schedule per cell)\n")
+    print(dryrun_table(data))
+    print("\n### §Roofline (single-pod, trip-count-corrected)\n")
+    print(roofline_table(data))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + the roofline and
+kernel micro-benches. Prints ``name,us_per_call,derived`` CSV.
+
+Simulator cells are disk-cached (results/bench_cache.json); delete the
+cache to force re-measurement."""
+
+import sys
+import time
+
+from benchmarks import (
+    bench_fig4_work_sharing, bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
+    bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
+    bench_highspeed_projection, bench_kernels, bench_payload_sweep,
+    bench_roofline, bench_table1_workloads)
+from benchmarks.common import Cache
+
+MODULES = [
+    ("table1", bench_table1_workloads),
+    ("fig4", bench_fig4_work_sharing),
+    ("fig5", bench_fig5_rtt_cdf),
+    ("fig6", bench_fig6_feedback_rtt),
+    ("fig7", bench_fig7_broadcast_gather),
+    ("fig8", bench_fig8_bg_cdf),
+    ("highspeed", bench_highspeed_projection),
+    ("payload_sweep", bench_payload_sweep),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    cache = Cache()
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        for row in mod.run(cache):
+            n, us, derived = row
+            print(f"{n},{us:.1f},{derived}")
+        print(f"# {name} finished in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    cache.save()
+
+
+if __name__ == "__main__":
+    main()

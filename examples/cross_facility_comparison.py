@@ -1,0 +1,40 @@
+"""The paper's full evaluation in miniature: all three patterns x three
+architectures, printing a compact version of Figs 4/6/7 plus the headline
+overhead ratios (§6 conclusions).
+
+    PYTHONPATH=src python examples/cross_facility_comparison.py
+"""
+
+from repro.core import run_pattern, summarize
+from repro.core.metrics import overhead_table
+
+ARCHS = ("dts", "prs-haproxy", "mss")
+
+
+def main() -> None:
+    print("== Fig4 (mini): work-sharing throughput, dstream ==")
+    ws = []
+    for arch in ARCHS:
+        for nc in (1, 8, 32):
+            s = summarize(run_pattern("work_sharing", arch, "dstream", nc,
+                                      total_messages=2048, n_runs=1)[0])
+            ws.append(s)
+            print(f"  {arch:13s} c={nc:2d}  {s.throughput_msgs_s:8.0f} msgs/s")
+    print("== Fig6 (mini): feedback median RTT, dstream ==")
+    for arch in ARCHS:
+        for nc in (1, 8):
+            s = summarize(run_pattern("feedback", arch, "dstream", nc,
+                                      total_messages=1536, n_runs=1)[0])
+            print(f"  {arch:13s} c={nc:2d}  {s.median_rtt_s * 1e3:8.0f} ms")
+    print("== Fig7a (mini): broadcast throughput, generic ==")
+    for arch in ARCHS:
+        s = summarize(run_pattern("broadcast", arch, "generic", 8,
+                                  total_messages=256, n_runs=1)[0])
+        print(f"  {arch:13s} c= 8  {s.throughput_msgs_s:8.0f} msgs/s")
+    print("== overhead vs DTS (work sharing) ==")
+    for (arch, wl, nc), ov in sorted(overhead_table(ws).items()):
+        print(f"  {arch:13s} c={nc:2d}  {ov:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import (
+    AsyncCheckpointer, latest_checkpoint, restore_checkpoint,
+    save_checkpoint)

@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+-node posture (DESIGN.md §3):
+* **atomic commit** — leaves stream into ``<dir>.tmp``, the manifest (tree
+  structure, shapes, dtypes, step) is written last, then one rename
+  publishes the checkpoint; a crashed writer can never produce a
+  half-checkpoint that restore() would accept.
+* **mesh-agnostic restore** — leaves are stored unsharded (numpy); the
+  restorer re-shards via ``jax.device_put`` with whatever sharding the
+  *current* mesh prescribes, so a job can restart elastically on a
+  different topology.
+* **async writer** — a background thread drains a bounded queue, so the
+  train loop is blocked only by ``device_get``, not the filesystem.
+* retention of the newest K checkpoints; corrupted/partial dirs are
+  ignored by ``latest_checkpoint``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_SAFE.sub("_", str(getattr(p, "key", getattr(p, "idx", p))))
+                        for p in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    keep: int = 3) -> str:
+    """Blocking atomic save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    entries = []
+    for i, (name, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        entries.append({"name": name, "file": fname,
+                        "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {"step": step, "entries": entries,
+                "treedef": str(treedef)}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _apply_retention(directory, keep)
+    return final
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, d, MANIFEST)))
+    for stale in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, stale))
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in sorted(os.listdir(directory)):
+        p = os.path.join(directory, d)
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(p, MANIFEST)):
+            best = p
+    return best
+
+
+def restore_checkpoint(path: str, target_tree: Any,
+                       shardings: Any = None) -> tuple[int, Any]:
+    """Restore into the structure of ``target_tree``; optionally re-shard
+    each leaf with the matching entry of ``shardings`` (elastic restart on
+    a different mesh)."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["entries"]
+    target_leaves, treedef = jax.tree_util.tree_flatten(target_tree)
+    if len(target_leaves) != len(leaves_meta):
+        raise ValueError(
+            f"checkpoint has {len(leaves_meta)} leaves; target expects "
+            f"{len(target_leaves)}")
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_meta))
+    out = []
+    for meta, tgt, shd in zip(leaves_meta, target_leaves, shard_leaves):
+        arr = np.load(os.path.join(path, meta["file"]))
+        if list(arr.shape) != list(tgt.shape):
+            raise ValueError(
+                f"shape mismatch for {meta['name']}: "
+                f"{arr.shape} vs {tgt.shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=tgt.dtype))
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with a bounded queue."""
+
+    def __init__(self, directory: str, keep: int = 3, max_pending: int = 2):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save_checkpoint(self.directory, step, host_tree, self.keep)
+            except BaseException as e:          # surfaced on next save/wait
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: Any) -> None:
+        if self._error:
+            raise RuntimeError("async checkpoint failed") from self._error
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._error:
+            raise RuntimeError("async checkpoint failed") from self._error
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

@@ -1,0 +1,20 @@
+"""xlstm-1.3b [ssm]: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+48 blocks, every 8th is sLSTM (6 sLSTM : 42 mLSTM); d_ff=0 — blocks carry
+their own 2x up/down projections. Heads (4) are not TP-shardable, so
+training shards batch over (data x model) instead (pure 256-way DP)."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    slstm_every=8, microbatches=1, scan_layers=False,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="xlstm-1.3b-smoke", family="ssm",
+    n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+    d_ff=0, vocab_size=128, slstm_every=2, scan_layers=False,
+    remat=False,
+)

@@ -1,0 +1,32 @@
+"""The paper's primary contribution: cross-facility data streaming
+architectures (DTS / PRS / MSS), the DS2HPC + SciStream + S3M deployment
+machinery, a RabbitMQ-semantics broker, and the discrete-event StreamSim
+evaluation engine (paper §2-§5)."""
+
+from repro.core.architectures import (
+    ALL_ARCHITECTURES, Architecture, Calibration, DirectStreaming,
+    ManagedServiceStreaming, ProxiedStreaming, make_architecture)
+from repro.core.broker import BrokerCluster, ClassicQueue, Message
+from repro.core.ds2hpc import ClusterInventory, RabbitMQRelease
+from repro.core.metrics import (
+    overhead_table, overhead_vs_baseline, rtt_cdf, summarize,
+    throughput_msgs_per_s)
+from repro.core.patterns import CONSUMER_SWEEP, run_pattern, sweep
+from repro.core.s3m import ResourceSettings, S3MService
+from repro.core.scistream import S2CS, S2UC, establish_prs_session
+from repro.core.simulator import (
+    ExperimentSpec, RunResult, SimParams, StreamSim, run_experiment)
+from repro.core.workloads import (
+    DSTREAM, GENERIC, LSTREAM, WORKLOADS, Workload, get_workload)
+
+__all__ = [
+    "ALL_ARCHITECTURES", "Architecture", "BrokerCluster", "CONSUMER_SWEEP",
+    "Calibration", "ClassicQueue", "ClusterInventory", "DSTREAM",
+    "DirectStreaming", "ExperimentSpec", "GENERIC", "LSTREAM",
+    "ManagedServiceStreaming", "Message", "ProxiedStreaming",
+    "RabbitMQRelease", "ResourceSettings", "RunResult", "S2CS", "S2UC",
+    "S3MService", "SimParams", "StreamSim", "WORKLOADS", "Workload",
+    "establish_prs_session", "get_workload", "make_architecture",
+    "overhead_table", "overhead_vs_baseline", "rtt_cdf", "run_experiment",
+    "run_pattern", "summarize", "sweep", "throughput_msgs_per_s",
+]

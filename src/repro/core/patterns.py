@@ -1,0 +1,115 @@
+"""Experiment drivers for the paper's three messaging patterns (§5.1).
+
+* **work sharing** — embarrassingly parallel fan-out (hyperparameter
+  searches, Monte-Carlo ensembles): producers push to shared work queues,
+  messages round-robin across consumers. Metric: aggregate throughput.
+* **work sharing with feedback** — distribute-with-reply (TF-PS/MXNet-style
+  data-parallel DL, master-worker task farms): requests via the work-queue
+  model, replies via per-producer direct reply queues. Metric: RTT.
+* **broadcast & gather** — DDP motif (NCCL/Gloo: weight fan-out +
+  gradient reduce): one producer fans out via pub-sub to every consumer and
+  gathers all replies from a single gather queue. Metrics: broadcast
+  throughput + gather RTT.
+
+Each driver returns (RunResult, Summary) pairs across a consumer sweep, and
+is consumed both by benchmarks/ (paper figures) and tests/.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.architectures import Calibration
+from repro.core.ds2hpc import ClusterInventory
+from repro.core.metrics import Summary, summarize
+from repro.core.simulator import (
+    ExperimentSpec, RunResult, SimParams, run_experiment)
+from repro.core.workloads import Workload, get_workload
+
+#: the paper's consumer sweep (Figs 4-8)
+CONSUMER_SWEEP = (1, 2, 4, 8, 16, 32, 64)
+
+#: broadcast&gather replies are aggregation/metric payloads, much smaller
+#: than the 4 MiB broadcast body (paper §5.1: "all workers send back metrics
+#: to be reduced at the initiator"): 4 MiB / 256 = 16 KiB replies. The sharp
+#: RTT increase beyond 4 consumers (Fig 7b) then emerges from broker-egress
+#: saturation on the broadcast leg plus the single producer gathering and
+#: broadcasting concurrently.
+GATHER_REPLY_FACTOR = 1.0 / 256.0
+
+
+def _params(seed: int, **overrides) -> SimParams:
+    p = SimParams(seed=seed)
+    for k, v in overrides.items():
+        setattr(p, k, v)
+    return p
+
+
+def run_pattern(pattern: str, arch: str, workload: str | Workload,
+                n_consumers: int, *,
+                total_messages: int = 8192,
+                n_runs: int = 3,
+                seed: int = 0,
+                inventory: Optional[ClusterInventory] = None,
+                cal: Optional[Calibration] = None,
+                **param_overrides) -> list[RunResult]:
+    """Run one (pattern, architecture, workload, consumer-count) cell.
+
+    The paper averages three runs per data point; we run ``n_runs`` seeds.
+    Work-sharing patterns use equal producer/consumer counts; broadcast
+    patterns use a single producer (paper §5.2).
+    """
+    wl = get_workload(workload) if isinstance(workload, str) else workload
+    n_producers = 1 if pattern.startswith("broadcast") else n_consumers
+    if pattern == "broadcast_gather" and "reply_factor" not in param_overrides:
+        param_overrides["reply_factor"] = GATHER_REPLY_FACTOR
+    results = []
+    for r in range(n_runs):
+        spec = ExperimentSpec(
+            pattern=pattern, workload=wl, arch=arch,
+            n_producers=n_producers, n_consumers=n_consumers,
+            total_messages=total_messages,
+            params=_params(seed + 1000 * r, **param_overrides))
+        if cal is not None or inventory is not None:
+            from repro.core.architectures import make_architecture
+            inv = inventory or ClusterInventory()
+            a = make_architecture(arch, inv, cal)
+            results.append(run_experiment(spec, inv, a))
+        else:
+            results.append(run_experiment(spec))
+    return results
+
+
+def sweep(pattern: str, archs: Sequence[str], workload: str,
+          consumers: Sequence[int] = CONSUMER_SWEEP, *,
+          total_messages: int = 8192, n_runs: int = 3, seed: int = 0,
+          inventory: Optional[ClusterInventory] = None,
+          cal: Optional[Calibration] = None,
+          **param_overrides) -> list[Summary]:
+    """Full paper-style sweep; returns averaged summaries per cell."""
+    out: list[Summary] = []
+    for arch in archs:
+        for nc in consumers:
+            rs = run_pattern(pattern, arch, workload, nc,
+                             total_messages=total_messages, n_runs=n_runs,
+                             seed=seed, inventory=inventory, cal=cal,
+                             **param_overrides)
+            out.append(average_summaries([summarize(r) for r in rs]))
+    return out
+
+
+def average_summaries(ss: Sequence[Summary]) -> Summary:
+    """Average the metric fields over repeated runs (paper: 3-run mean)."""
+    import numpy as np
+    first = ss[0]
+    if not all(s.feasible for s in ss):
+        return first
+    out = Summary(**{**first.__dict__})
+    for f in ("throughput_msgs_s", "median_rtt_s", "p95_rtt_s",
+              "min_rtt_s", "goodput_gbps"):
+        vals = [getattr(s, f) for s in ss]
+        vals = [v for v in vals if np.isfinite(v)]
+        setattr(out, f, float(np.mean(vals)) if vals else float("nan"))
+    out.rejected = int(np.mean([s.rejected for s in ss]))
+    out.n_messages = int(np.mean([s.n_messages for s in ss]))
+    return out

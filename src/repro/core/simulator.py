@@ -1,0 +1,495 @@
+"""Discrete-event streaming simulator (paper §5.2 — "StreamSim").
+
+The paper's evaluation drives a Golang simulator whose producers, consumers
+and coordinator exchange real messages through the deployed architectures.
+Here the same experiment logic runs against the *modeled* architectures of
+:mod:`repro.core.architectures` under a deterministic virtual clock, so the
+whole 1..64-consumer sweep of Figs 4-8 runs in seconds and is bit-stable
+across runs (seeded jitter only).
+
+Engine design: every message steps hop-by-hop through its architecture's
+path elements; each shared resource (client NIC, DSN NIC, broker CPU pool,
+overlay tunnel, ingress pipe/worker) is a FIFO server or server-pool whose
+busy intervals are tracked analytically — one heap event per hop, so a full
+128K-message run is a few million events.
+
+Flow control matches the paper's RabbitMQ configuration (§5.2):
+publisher-confirm windows, consumer prefetch (basic.qos), batch
+acknowledgements, reject-publish overflow with producer re-publish.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.architectures import (
+    Architecture, PathElement, ResourceSpec, make_architecture)
+from repro.core.broker import BrokerCluster, Delivery, Message
+from repro.core.ds2hpc import ClusterInventory
+from repro.core.workloads import Workload
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+#: per-workload consumer processing time (seconds/message): parse+handle
+#: cost on the Andes clients (binary decode / HDF5 parse / 4 MiB handling).
+CONSUMER_PROC_S = {"dstream": 80e-6, "lstream": 1.2e-3, "generic": 3.0e-3}
+
+
+@dataclasses.dataclass
+class SimParams:
+    confirm_window: int = 128       # unconfirmed publishes per producer
+    window_bytes: int = 48 * 1024 * 1024   # in-flight byte cap per producer
+    prefetch: int = 64              # basic.qos per consumer
+    ack_batch: int = 8              # ack-multiple every N deliveries
+    n_work_queues: int = 2          # paper: two shared work queues
+    reply_factor: float = 1.0       # reply size = factor * request size
+    publish_retry_s: float = 10e-3  # backoff after reject-publish
+    jitter: float = 0.03            # +/- service-time jitter (CDF spread)
+    seed: int = 0
+    max_events: int = 30_000_000
+    max_sim_time: float = 36_000.0
+    consumer_proc_s: Optional[float] = None   # override per-workload default
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    pattern: str                    # work_sharing | feedback | broadcast_gather
+    workload: Workload
+    arch: str                       # architecture name for make_architecture
+    n_producers: int
+    n_consumers: int
+    total_messages: int
+    params: SimParams = dataclasses.field(default_factory=SimParams)
+
+
+@dataclasses.dataclass
+class RunResult:
+    spec: ExperimentSpec
+    feasible: bool
+    infeasible_reason: str = ""
+    consume_times: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    rtts: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(0))
+    publish_starts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    rejected_publishes: int = 0
+    redelivered: int = 0
+    sim_time: float = 0.0
+    n_events: int = 0
+
+    @property
+    def n_consumed(self) -> int:
+        return int(self.consume_times.size)
+
+
+class InfeasibleConfiguration(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Virtual-time resources
+# ---------------------------------------------------------------------------
+
+
+class _Resource:
+    __slots__ = ("spec", "_free_pipe", "_free_pool")
+
+    def __init__(self, spec: ResourceSpec):
+        self.spec = spec
+        self._free_pipe = 0.0
+        self._free_pool: list[float] = [0.0] * max(1, spec.servers)
+        heapq.heapify(self._free_pool)
+
+    def hold_time(self, nbytes: float) -> float:
+        s = self.spec
+        if s.kind == "pipe":
+            return s.service_s + (nbytes / s.rate_Bps if s.rate_Bps else 0.0)
+        return s.service_s + nbytes * s.per_byte_s
+
+    def acquire(self, t: float, nbytes: float, jitter: float) -> float:
+        hold = self.hold_time(nbytes) * (1.0 + jitter)
+        if self.spec.kind == "pipe":
+            start = t if t > self._free_pipe else self._free_pipe
+            end = start + hold
+            self._free_pipe = end
+            return end
+        free = heapq.heappop(self._free_pool)
+        start = t if t > free else free
+        end = start + hold
+        heapq.heappush(self._free_pool, end)
+        return end
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class StreamSim:
+    """One experiment run. Deterministic given (spec, inventory, cal)."""
+
+    def __init__(self, spec: ExperimentSpec,
+                 inventory: Optional[ClusterInventory] = None,
+                 arch: Optional[Architecture] = None):
+        self.spec = spec
+        self.p = spec.params
+        self.inv = inventory or ClusterInventory()
+        self.arch = arch or make_architecture(spec.arch, self.inv)
+        self.arch.configure(spec.n_producers, spec.n_consumers)
+        self.rng = np.random.default_rng(self.p.seed)
+        self.now = 0.0
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._eseq = itertools.count()
+        self.n_events = 0
+        self.resources = {k: _Resource(s)
+                          for k, s in self.arch.resources.items()}
+        self.broker = BrokerCluster(n_nodes=self.inv.n_dsn,
+                                    default_prefetch=self.p.prefetch)
+        # metrics
+        self.consume_times: list[float] = []
+        self.rtts: list[float] = []
+        self.publish_starts: list[float] = []
+        self.rejected = 0
+        # flow state
+        self._blocked_confirms: dict[str, list[Callable[[], None]]] = {}
+        self._done = False
+        self._replies_expected = 0
+        self._replies_received = 0
+        self._consumed = 0
+        self._expected_consumed = 0
+        self._proc_s = (self.p.consumer_proc_s
+                        if self.p.consumer_proc_s is not None
+                        else CONSUMER_PROC_S.get(
+                            spec.workload.name,
+                            # custom workloads: scale handling cost with
+                            # payload size (~dstream's per-byte rate)
+                            80e-6 * spec.workload.payload_bytes / 16384))
+        self._check_feasibility()
+        self._setup_pattern()
+
+    # -- scheduling -------------------------------------------------------------
+    def _at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._eseq), fn))
+
+    def _after(self, dt: float, fn: Callable[[], None]) -> None:
+        self._at(self.now + dt, fn)
+
+    def _jit(self) -> float:
+        j = self.p.jitter
+        return float(self.rng.uniform(-j, j)) if j else 0.0
+
+    # -- transit: step a message through path elements ----------------------------
+    def _transit(self, t0: float, elements: list[PathElement], size: int,
+                 done: Callable[[float], None]) -> None:
+        def step(i: int, t: float) -> None:
+            while i < len(elements) and elements[i].resource is None:
+                t += elements[i].latency_s
+                i += 1
+            if i >= len(elements):
+                done(t)
+                return
+            el = elements[i]
+            res = self.resources[el.resource]
+            nbytes = size * el.byte_factor + el.extra_bytes
+            t_end = res.acquire(t, nbytes, self._jit()) + el.latency_s
+            self._at(t_end, lambda: step(i + 1, t_end))
+        self._at(t0, lambda: step(0, t0))
+
+    # -- feasibility (e.g. Stunnel's 16-connection cap) ----------------------------
+    def _check_feasibility(self) -> None:
+        limit = self.arch.producer_conn_limit()
+        if limit is not None and self.spec.n_producers > limit:
+            raise InfeasibleConfiguration(
+                f"{self.arch.name}: {self.spec.n_producers} producer "
+                f"connections exceed tunnel connection limit {limit}")
+
+    # -- topology per pattern --------------------------------------------------------
+    def _setup_pattern(self) -> None:
+        spec, p = self.spec, self.p
+        nP, nC = spec.n_producers, spec.n_consumers
+        per_producer = spec.total_messages // nP
+        self._expected_consumed = per_producer * nP
+        pat = spec.pattern
+        if pat in ("work_sharing", "feedback"):
+            nq = min(p.n_work_queues, nC)
+            self._work_queues = [f"work:{i}" for i in range(nq)]
+            for q in self._work_queues:
+                self.broker.declare_queue(q)
+            for c in range(nC):
+                q = self._work_queues[c % nq]
+                self.broker.register_consumer(
+                    f"c{c}", q, prefetch=p.prefetch,
+                    connected_node=(c + 1) % self.inv.n_dsn)
+            if pat == "feedback":
+                self._replies_expected = self._expected_consumed
+                for pr in range(nP):
+                    rq = f"reply:{pr}"
+                    self.broker.declare_queue(rq, control=False)
+                    self.broker.register_consumer(
+                        f"p{pr}", rq, prefetch=p.prefetch,
+                        connected_node=pr % self.inv.n_dsn)
+            for pr in range(nP):
+                self._start_producer(pr, per_producer,
+                                     queue_of=self._ws_queue_of(pr))
+        elif pat in ("broadcast", "broadcast_gather"):
+            assert nP == 1, "broadcast patterns use a single producer"
+            self._expected_consumed = per_producer * nC
+            qs = []
+            for c in range(nC):
+                qn = f"bq:{c}"
+                self.broker.declare_queue(qn)
+                self.broker.register_consumer(
+                    f"c{c}", qn, prefetch=p.prefetch,
+                    connected_node=(c + 1) % self.inv.n_dsn)
+                qs.append(qn)
+            self.broker.declare_fanout("bcast", qs)
+            if pat == "broadcast_gather":
+                self._replies_expected = per_producer * nC
+                self.broker.declare_queue("gather")
+                self.broker.register_consumer("p0", "gather",
+                                              prefetch=p.prefetch,
+                                              connected_node=0)
+            self._start_producer(0, per_producer,
+                                 queue_of=lambda i: "fanout:bcast")
+        else:
+            raise ValueError(f"unknown pattern {pat!r}")
+
+    def _ws_queue_of(self, pr: int) -> Callable[[int], str]:
+        qs = self._work_queues
+        return lambda i: qs[(pr + i) % len(qs)]
+
+    # -- producers ---------------------------------------------------------------
+    def _start_producer(self, pr: int, n_msgs: int,
+                        queue_of: Callable[[int], str]) -> None:
+        spec, p = self.spec, self.p
+        pnode = self.inv.producer_node_of(pr)
+        bnode = pr % self.inv.n_dsn
+        state = {"sent": 0, "inflight": 0}
+        size = spec.workload.payload_bytes
+        flush = self.arch.client_flush_s()
+        # effective publisher window: message-count cap AND byte cap
+        window = max(2, min(p.confirm_window, p.window_bytes // size))
+
+        def maybe_send() -> None:
+            while (state["sent"] < n_msgs
+                   and state["inflight"] < window):
+                i = state["sent"]
+                state["sent"] += 1
+                state["inflight"] += 1
+                rk = queue_of(i)
+                msg = Message(routing_key=rk, size=size,
+                              producer_id=f"p{pr}",
+                              reply_to=(f"reply:{pr}"
+                                        if spec.pattern == "feedback" else
+                                        ("gather" if spec.pattern ==
+                                         "broadcast_gather" else None)))
+                t_start = self.now + flush
+                msg.publish_time = t_start
+                self.publish_starts.append(t_start)
+                home = self._home_of(rk)
+                path = self.arch.publish_path(pnode, bnode, home)
+                self._transit(t_start, path, size,
+                              lambda t, m=msg: arrive(t, m))
+
+        def arrive(t: float, msg: Message) -> None:
+            ok, queued = self.broker.publish(msg)
+            if not ok:
+                self.rejected += 1
+                self._at(t + p.publish_retry_s,
+                         lambda: retry(msg))
+                return
+            for qn in queued:
+                self._pump(qn, t)
+            # credit-based flow control (RabbitMQ): if any target queue's
+            # backlog exceeds its credit, the channel is blocked — withhold
+            # the publisher confirm until the queue drains.
+            blocked_on = next(
+                (qn for qn in queued if self.broker.queues[qn].flow_blocked),
+                None)
+            if blocked_on is not None:
+                self._blocked_confirms.setdefault(blocked_on, []).append(confirm)
+            else:
+                self._at(t + self.arch.control_latency_s(), confirm)
+
+        def retry(msg: Message) -> None:
+            home = self._home_of(msg.routing_key)
+            path = self.arch.publish_path(pnode, bnode, home)
+            self._transit(self.now, path, size,
+                          lambda t, m=msg: arrive(t, m))
+
+        def confirm() -> None:
+            state["inflight"] -= 1
+            maybe_send()
+
+        self._at(0.0, maybe_send)
+
+    def _home_of(self, routing_key: str) -> int:
+        if routing_key.startswith("fanout:"):
+            return 0
+        return self.broker.queues[routing_key].home_node
+
+    # -- delivery pump --------------------------------------------------------------
+    def _pump(self, queue_name: str, t: float) -> None:
+        while True:
+            d = self.broker.next_delivery(queue_name)
+            if d is None:
+                break
+            self._dispatch_delivery(d, t)
+        # release flow-blocked publishers once the queue has drained
+        blocked = self._blocked_confirms.get(queue_name)
+        if blocked and self.broker.queues[queue_name].flow_resume:
+            self._blocked_confirms[queue_name] = []
+            dt = self.arch.control_latency_s()
+            for confirm in blocked:
+                self._after(dt, confirm)
+
+    def _dispatch_delivery(self, d: Delivery, t: float) -> None:
+        cid = d.consumer_id
+        if cid.startswith("p"):          # producer consuming replies
+            self._deliver_to_producer(d, t)
+        else:
+            self._deliver_to_consumer(d, t)
+
+    # -- consumers --------------------------------------------------------------------
+    def _consumer_state(self, cid: str) -> dict:
+        if not hasattr(self, "_cstates"):
+            self._cstates: dict[str, dict] = {}
+        st = self._cstates.get(cid)
+        if st is None:
+            st = {"free_at": 0.0, "since_ack": 0, "last_tag": 0}
+            self._cstates[cid] = st
+        return st
+
+    def _deliver_to_consumer(self, d: Delivery, t: float) -> None:
+        cidx = int(d.consumer_id[1:])
+        cnode = self.inv.consumer_node_of(cidx)
+        home = self.broker.queues[d.queue].home_node
+        bnode = (cidx + 1) % self.inv.n_dsn   # node this consumer connects to
+        path = self.arch.delivery_path(bnode, home, cnode)
+        size = d.message.size
+
+        def landed(t_arr: float) -> None:
+            st = self._consumer_state(d.consumer_id)
+            start = max(t_arr + self.arch.recv_latency_s(size), st["free_at"])
+            t_done = start + self._proc_s * (1.0 + self._jit())
+            st["free_at"] = t_done
+            self._at(t_done, lambda: consumed(t_done))
+
+        def consumed(t_done: float) -> None:
+            self.consume_times.append(t_done)
+            self._consumed += 1
+            self._ack(d, t_done)
+            if d.message.reply_to is not None:
+                self._send_reply(d, cidx, cnode, t_done)
+            self._check_done()
+
+        self._transit(t, path, size, landed)
+
+    def _ack(self, d: Delivery, t: float) -> None:
+        """Batch acks: flush every ack_batch deliveries (ack-multiple)."""
+        st = self._consumer_state(d.consumer_id)
+        st["since_ack"] += 1
+        st["last_tag"] = max(st["last_tag"], d.delivery_tag)
+        pending_all = len(self.broker.channels[d.consumer_id].unacked)
+        if st["since_ack"] >= self.spec.params.ack_batch or \
+                pending_all >= self.spec.params.prefetch or \
+                self._consumed >= self._expected_consumed:
+            tag = st["last_tag"]
+            st["since_ack"] = 0
+            cid = d.consumer_id
+            qn = d.queue
+
+            def ack_arrives() -> None:
+                self.broker.ack(cid, tag, multiple=True)
+                self._pump(qn, self.now)
+            self._at(t + self.arch.control_latency_s(), ack_arrives)
+
+    def _send_reply(self, d: Delivery, cidx: int, cnode: int,
+                    t: float) -> None:
+        spec = self.spec
+        size = int(spec.workload.payload_bytes * spec.params.reply_factor)
+        reply = Message(routing_key=d.message.reply_to, size=size,
+                        producer_id=f"c{cidx}",
+                        correlation_id=d.message.msg_id,
+                        headers={"req_publish": d.message.publish_time})
+        bnode = (cidx + 1) % self.inv.n_dsn
+        home = self._home_of(reply.routing_key)
+        path = self.arch.reply_publish_path(cnode, bnode, home)
+
+        def arrive(t_arr: float) -> None:
+            ok, queued = self.broker.publish(reply)
+            if not ok:
+                self.rejected += 1
+                self._at(t_arr + spec.params.publish_retry_s,
+                         lambda: self._transit(
+                             self.now, path, size, arrive))
+                return
+            for qn in queued:
+                self._pump(qn, t_arr)
+
+        self._transit(t, path, size, arrive)
+
+    # -- producers consuming replies ----------------------------------------------------
+    def _deliver_to_producer(self, d: Delivery, t: float) -> None:
+        pidx = int(d.consumer_id[1:])
+        pnode = self.inv.producer_node_of(pidx)
+        home = self.broker.queues[d.queue].home_node
+        bnode = pidx % self.inv.n_dsn
+        path = self.arch.reply_delivery_path(home, bnode, pnode)
+        size = d.message.size
+
+        def landed(t_arr: float) -> None:
+            t_seen = t_arr + self.arch.recv_latency_s(size)
+            req_t = d.message.headers.get("req_publish")
+            if req_t is not None:
+                self.rtts.append(t_seen - req_t)
+            self._replies_received += 1
+            self._ack(d, t_seen)
+            self._check_done()
+
+        self._transit(t, path, size, landed)
+
+    # -- termination ----------------------------------------------------------------------
+    def _check_done(self) -> None:
+        if self._consumed >= self._expected_consumed and \
+                self._replies_received >= self._replies_expected:
+            self._done = True
+
+    # -- main loop -------------------------------------------------------------------------
+    def run(self) -> RunResult:
+        p = self.p
+        while self._heap and not self._done:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            self.n_events += 1
+            if self.n_events > p.max_events or t > p.max_sim_time:
+                break
+            fn()
+        redeliv = sum(q.stats.redelivered for q in self.broker.queues.values())
+        return RunResult(
+            spec=self.spec, feasible=True,
+            consume_times=np.asarray(self.consume_times),
+            rtts=np.asarray(self.rtts),
+            publish_starts=np.asarray(self.publish_starts),
+            rejected_publishes=self.rejected,
+            redelivered=redeliv,
+            sim_time=self.now, n_events=self.n_events)
+
+
+def run_experiment(spec: ExperimentSpec,
+                   inventory: Optional[ClusterInventory] = None,
+                   arch: Optional[Architecture] = None) -> RunResult:
+    """Run one experiment; infeasible configs return a RunResult with
+    feasible=False (matching the paper's missing Stunnel data points)."""
+    try:
+        sim = StreamSim(spec, inventory, arch)
+    except InfeasibleConfiguration as e:
+        return RunResult(spec=spec, feasible=False, infeasible_reason=str(e))
+    return sim.run()

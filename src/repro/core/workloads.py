@@ -1,0 +1,153 @@
+"""Streaming workload definitions (paper Table 1).
+
+Three workloads drive every experiment in the paper:
+
+* **Dstream** — Deleria/GRETA-like: ~KiB-range binary event batches. The paper
+  fixes 2 KiB/event and 8 events/message => 16 KiB messages, ~32 Gbps detector
+  rate, non-MPI parallel producers/consumers.
+* **Lstream** — LCLS-like: ~1 MiB HDF5-formatted event messages, ~30 Gbps,
+  MPI-launched producers/consumers.
+* **generic** — 4 MiB binary, one item per message, 25 Gbps, MPI-based; used
+  for the broadcast & gather pattern.
+
+The classes here are consumed by both the discrete-event simulator
+(:mod:`repro.core.simulator`) and the real-time ingest path
+(:mod:`repro.streaming`), so the payload generators are deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+from typing import Iterator
+
+import numpy as np
+
+KIB = 1024
+MIB = 1024 * 1024
+GBIT = 1e9  # network giga (decimal), as in "1 Gbps Ethernet"
+
+
+class PayloadFormat(enum.Enum):
+    BINARY = "binary"
+    HDF5 = "hdf5"
+    JSON = "json"
+
+
+class Parallelism(enum.Enum):
+    MPI = "mpi"
+    NON_MPI = "non-mpi"
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Streaming characteristics of one workload (one column of Table 1)."""
+
+    name: str
+    payload_bytes: int           # bytes per *message* as streamed
+    payload_format: PayloadFormat
+    payload_element: str         # "events" | "variables"
+    events_per_message: int      # 1 => one item per message
+    event_bytes: int             # bytes per element (payload_bytes / events)
+    data_rate_gbps: float        # nominal source data rate (detector-side)
+    consumption_parallelism: Parallelism
+    production_parallelism: Parallelism
+
+    @property
+    def message_bits(self) -> int:
+        return self.payload_bytes * 8
+
+    def messages_per_second_at_rate(self, gbps: float | None = None) -> float:
+        """Message rate needed to sustain ``gbps`` (defaults to nominal)."""
+        rate = self.data_rate_gbps if gbps is None else gbps
+        return rate * GBIT / self.message_bits
+
+    def payload(self, seed: int) -> bytes:
+        """Deterministic pseudo-payload of exactly ``payload_bytes`` bytes.
+
+        Uses a counter-mode SHA256 expansion so tests can assert integrity
+        end-to-end without storing real detector data.
+        """
+        out = bytearray()
+        counter = 0
+        stem = f"{self.name}:{seed}".encode()
+        while len(out) < self.payload_bytes:
+            out += hashlib.sha256(stem + counter.to_bytes(8, "little")).digest()
+            counter += 1
+        return bytes(out[: self.payload_bytes])
+
+    def payload_digest(self, seed: int) -> str:
+        return hashlib.sha256(self.payload(seed)).hexdigest()
+
+    def event_stream(self, seed: int, n_messages: int) -> Iterator[bytes]:
+        for i in range(n_messages):
+            yield self.payload(seed * 1_000_003 + i)
+
+
+# --- Table 1 ----------------------------------------------------------------
+
+DSTREAM = Workload(
+    name="dstream",
+    payload_bytes=16 * KIB,          # 8 events x 2 KiB (paper fixes these)
+    payload_format=PayloadFormat.BINARY,
+    payload_element="events",
+    events_per_message=8,
+    event_bytes=2 * KIB,
+    data_rate_gbps=32.0,
+    consumption_parallelism=Parallelism.NON_MPI,
+    production_parallelism=Parallelism.NON_MPI,
+)
+
+LSTREAM = Workload(
+    name="lstream",
+    payload_bytes=1 * MIB,
+    payload_format=PayloadFormat.HDF5,
+    payload_element="events",
+    events_per_message=1,            # one HDF5 file per message
+    event_bytes=1 * MIB,
+    data_rate_gbps=30.0,
+    consumption_parallelism=Parallelism.MPI,
+    production_parallelism=Parallelism.MPI,
+)
+
+GENERIC = Workload(
+    name="generic",
+    payload_bytes=4 * MIB,
+    payload_format=PayloadFormat.BINARY,
+    payload_element="variables",
+    events_per_message=1,            # one item per message
+    event_bytes=4 * MIB,
+    data_rate_gbps=25.0,
+    consumption_parallelism=Parallelism.MPI,
+    production_parallelism=Parallelism.MPI,
+)
+
+WORKLOADS: dict[str, Workload] = {
+    w.name: w for w in (DSTREAM, LSTREAM, GENERIC)
+}
+
+
+def get_workload(name: str) -> Workload:
+    try:
+        return WORKLOADS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown workload {name!r}; options: {sorted(WORKLOADS)}"
+        ) from None
+
+
+def tokens_from_payload(payload: bytes, vocab_size: int, n_tokens: int) -> np.ndarray:
+    """Deterministically map a streamed payload to a token sequence.
+
+    This is the bridge the edge-to-HPC training integration uses: a streamed
+    detector message becomes training tokens. (Synthetic, but deterministic so
+    a redelivered message yields identical training data — required for the
+    fault-tolerance guarantees tested in tests/test_streaming_ingest.py.)
+    """
+    raw = np.frombuffer(payload, dtype=np.uint8)
+    if raw.size < n_tokens * 4:
+        reps = int(np.ceil(n_tokens * 4 / max(raw.size, 1)))
+        raw = np.tile(raw, reps)
+    words = raw[: n_tokens * 4].view("<u4").astype(np.int64)
+    return (words % np.int64(vocab_size)).astype(np.int32)

@@ -1,0 +1,105 @@
+"""Flash-decode Pallas TPU kernel: one query token per sequence against a
+long KV cache, online-softmax over KV blocks.
+
+Grid: (B * KV_heads, kv_blocks) — kv_blocks sequential, running (m, l, acc)
+for the G grouped query heads in VMEM scratch. The per-sequence cache
+length arrives via scalar prefetch so masked tail blocks are skipped.
+On a real pod this kernel runs per cache shard under shard_map (the
+cross-shard log-sum-exp combine is a tiny psum); the dry-run path uses the
+GSPMD grouped-einsum equivalent in :mod:`repro.models.layers`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, window: int, logit_cap: float,
+                   nk: int, block_k: int, n_kv: int):
+    bk = pl.program_id(0)
+    ik = pl.program_id(1)
+    b = bk // n_kv
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+    base = ik * block_k
+
+    @pl.when(base <= pos)                      # skip blocks past the cache
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                # (block_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                     # (G, block_k)
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        t_idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        ok = t_idx <= pos
+        if window > 0:
+            ok &= (pos - t_idx) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, window=0, logit_cap=0.0,
+                 scale=None, block_k=128, interpret=True):
+    """q: (B,H,hd); caches: (B,T,KV,hd); pos: (B,). Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    nk = T // block_k
+
+    qg = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        nk=nk, block_k=block_k, n_kv=KV)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # pos: scalar prefetch
+            pl.BlockSpec((1, G, hd), lambda bk, ik: (bk, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk, ik: (bk, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk, ik: (bk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bk, ik: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, kf, vf)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,123 @@
+"""Flash-attention forward Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — the last grid dimension is
+sequential on TPU, so the online-softmax running state (m, l, acc) lives in
+VMEM scratch and is revisited across kv blocks. Fully-masked causal blocks
+are skipped with ``pl.when`` (the FLOPs saving XLA's scan-based fallback
+cannot express).
+
+Supports GQA (KV heads indexed via ``head // group``), sliding windows
+(gemma2 local layers) and logit softcapping. TPU alignment: block_q /
+block_k should be multiples of 128 and head_dim a multiple of 128 on real
+hardware; interpret mode (CPU validation) has no such restriction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  logit_cap: float, nk: int, block_q: int, block_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qp = qpos_ref[...]                                   # (block_q,)
+    kp = kpos_ref[...]                                   # (block_k,)
+
+    # block-level visibility: skip blocks that are entirely masked
+    q_max, q_min = qp[-1], qp[0]
+    k_min, k_max = kp[0], kp[-1]
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_min <= q_max
+    if window > 0:
+        visible &= k_max > q_min - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (block_q, hd)
+        k = k_ref[0].astype(jnp.float32)                # (block_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                      # (block_q, block_k)
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        ok = jnp.ones_like(s, dtype=bool)
+        if causal:
+            ok &= qp[:, None] >= kp[None, :]
+        if window > 0:
+            ok &= (qp[:, None] - kp[None, :]) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        logit_cap=0.0, scale=None, block_q=128, block_k=128,
+                        interpret=True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); positions int32 (S,)/(T,).
+    Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        logit_cap=logit_cap, nk=nk, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda bh, iq, ik: (iq,)),
+            pl.BlockSpec((block_k,), lambda bh, iq, ik: (ik,)),
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), k_pos.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

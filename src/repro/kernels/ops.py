@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret=True`` (default here) executes the kernel bodies in Python on
+CPU — the validation mode this container supports. On real TPU pass
+``interpret=False`` (and see the per-kernel alignment notes: block sizes
+multiples of 128, head_dim padded to 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssm_scan import ssd_state_scan as _ssd_state_scan
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "scale", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                    logit_cap=0.0, scale=None, block_q=128, block_k=128,
+                    interpret=True):
+    return flash_attention_fwd(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        logit_cap=logit_cap, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "logit_cap", "scale", "block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, pos, *, window=0, logit_cap=0.0,
+                 scale=None, block_k=128, interpret=True):
+    return _flash_decode(q, k_cache, v_cache, pos, window=window,
+                         logit_cap=logit_cap, scale=scale, block_k=block_k,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_state_scan(states, totals, C, cum, *, interpret=True):
+    return _ssd_state_scan(states, totals, C, cum, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps=1e-6, block_rows=256, interpret=True):
+    return _rmsnorm(x, w, eps=eps, block_rows=block_rows,
+                    interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets for
+tests/test_kernels.py shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as _L
+from repro.models import mamba2 as _m2
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        logit_cap=0.0, scale=None):
+    return _L.attention_reference(q, k, v, q_pos, k_pos, causal=causal,
+                                  window=window, logit_cap=logit_cap,
+                                  scale=scale)
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos, *, window=0, logit_cap=0.0,
+                     scale=None):
+    return _L.decode_attention(q, k_cache, v_cache, pos, window=window,
+                               logit_cap=logit_cap, scale=scale)
+
+
+def ssd_state_scan_ref(states, totals, C, cum):
+    """Inter-chunk recurrence + y_inter, reference implementation.
+    states: (B,nc,nh,hd,N); totals: (B,nc,nh); C: (B,nc,Q,N);
+    cum: (B,nc,Q,nh)."""
+    B, nc, nh, hd, N = states.shape
+
+    def step(s, inp):
+        st, tot = inp
+        s_new = s * jnp.exp(tot)[:, :, None, None] + st
+        return s_new, s
+
+    final, prev = jax.lax.scan(
+        step, jnp.zeros((B, nh, hd, N), jnp.float32),
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         totals.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)
+    # y[b,c,i,h,d] = sum_n C[b,c,i,n] * prev[b,c,h,d,n] * exp(cum[b,c,i,h])
+    y = jnp.einsum("bcin,bchdn,bcih->bcihd",
+                   C.astype(jnp.float32), prev,
+                   jnp.exp(cum).astype(jnp.float32))
+    return y, final
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    return _L.rmsnorm(x, w, eps)

@@ -1,0 +1,47 @@
+"""Fused RMSNorm Pallas TPU kernel: one HBM pass (read x, write y) instead
+of XLA's separate square/mean/rsqrt/mul chain; fp32 statistics on-chip.
+
+Grid: (rows / block_rows,) with the full feature dim resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                  # (rows, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + w_ref[...].astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret=True):
+    """x: (..., D); w: (D,). Fused RMSNorm."""
+    shape = x.shape
+    D = shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xf.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    if pad:
+        out = out[:R]
+    return out.reshape(shape)

@@ -1,0 +1,83 @@
+"""Fused SSD inter-chunk state scan Pallas TPU kernel (Mamba2 / mLSTM).
+
+The chunked SSD dual form (repro.models.mamba2) splits into parallel
+intra-chunk GEMMs (MXU-friendly, left in XLA) and a *sequential* inter-chunk
+state recurrence. In XLA the recurrence materializes every per-chunk prev
+state (B, nc, nh, hd, N) to HBM; this kernel fuses the recurrence with the
+``y_inter`` contraction so the running state (hd, N) stays resident in VMEM
+and only (Q, hd) output tiles stream out.
+
+Grid: (B * nh, nc) — chunks sequential; state in VMEM scratch.
+
+  state_c   = state_{c-1} * exp(total_c) + states_c
+  y_inter_c = (C_c @ state_{c-1}^T) * exp(cum_c)        # (Q, hd)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_scan_kernel(states_ref, total_ref, c_ref, cum_ref,
+                     y_ref, final_ref, s_scr, *, nc: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    prev = s_scr[...]                                   # (hd, N) fp32
+    C = c_ref[0, 0].astype(jnp.float32)                 # (Q, N)
+    cum = cum_ref[0, 0].astype(jnp.float32)             # (Q,)
+    # y_inter = (C @ prev^T) * exp(cum)[:, None]
+    y = (C @ prev.T) * jnp.exp(cum)[:, None]            # (Q, hd)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_scr[...] = prev * jnp.exp(total_ref[0, 0]) + \
+        states_ref[0, 0].astype(jnp.float32)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        final_ref[0] = s_scr[...]
+
+
+def ssd_state_scan(states, totals, C, cum, *, interpret=True):
+    """states: (B, nc, nh, hd, N); totals: (B, nc, nh);
+    C: (B, nc, Q, N); cum: (B, nc, Q, nh).
+    Returns (y_inter (B, nc, Q, nh, hd), final_state (B, nh, hd, N))."""
+    B, nc, nh, hd, N = states.shape
+    Q = C.shape[2]
+    # flatten (B, nh) into the leading grid dim; per-head views
+    st = states.transpose(0, 2, 1, 3, 4).reshape(B * nh, nc, hd, N)
+    tot = totals.transpose(0, 2, 1).reshape(B * nh, nc)
+    # C is shared across heads: index_map picks the right (b, c) tile
+    cumh = cum.transpose(0, 3, 1, 2).reshape(B * nh, nc, Q)
+
+    kernel = functools.partial(_ssd_scan_kernel, nc=nc)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(B * nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd, N), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ic: (bh, ic)),
+            pl.BlockSpec((1, 1, Q, N), lambda bh, ic, nh=nh: (bh // nh, ic, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda bh, ic: (bh, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda bh, ic: (bh, ic, 0, 0)),
+            pl.BlockSpec((1, hd, N), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nh, nc, Q, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(st, tot, C, cumh)
+    y = y.reshape(B, nh, nc, Q, hd).transpose(0, 2, 3, 1, 4)
+    final = final.reshape(B, nh, hd, N)
+    return y, final

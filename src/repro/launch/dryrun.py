@@ -1,0 +1,484 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on 512 placeholder host devices, proving the distribution config
+is coherent, and extract the roofline terms from the compiled artifact.
+
+MUST be imported/run before anything else initializes jax (the XLA_FLAGS
+line above is therefore the first statement in the module).
+
+Per cell this records into a resumable JSON artifact:
+  * memory_analysis(): per-device argument/temp/output bytes (fits-check)
+  * cost_analysis(): per-device HLO FLOPs + bytes accessed
+  * collective bytes by op type, parsed from the post-SPMD HLO text
+  * the three roofline terms (v5e: 197 TF/s bf16, 819 GB/s HBM,
+    50 GB/s/link ICI), the dominant term, MODEL_FLOPS and the
+    useful-compute ratio.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k --mesh single --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, shapes_for
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import assemble, opt_state_shardings
+from repro.launch.steps import (
+    build_prefill_step, build_serve_step, build_train_step)
+from repro.models.zoo import build_model
+from repro.optim.adamw import AdamW
+
+# ---- TPU v5e hardware constants (roofline) ---------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# weight: bytes moved per result byte on a ring (all-reduce moves ~2x)
+_COLLECTIVE_WEIGHT = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective in post-SPMD HLO."""
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        out[op]["count"] += 1
+        out[op]["bytes"] += _bytes_of_type(type_str)
+    return out
+
+
+def collective_seconds(coll: dict) -> float:
+    t = 0.0
+    for op, rec in coll.items():
+        w = _COLLECTIVE_WEIGHT.get(op, 1.0)
+        t += w * rec["bytes"] / LINK_BW
+    return t
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), N = active params."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: per emitted token
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: XLA's cost analysis counts while-loop (lax.scan) bodies ONCE,
+# not x trip-count, so the full (scan-based) compile wildly under-reports
+# FLOPs/bytes/collectives. We therefore compile each cell twice more in an
+# *unrolled* configuration at 1 and 2 "scan units" (a unit = one layer, one
+# local/global pair, or one zamba macro-block), fit cost = fixed +
+# per_unit * U exactly, and scale to the full depth x microbatches.
+# The scanned compile is still what proves the cell lowers/fits (memory
+# analysis is allocation-based and correct under scan).
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+# analytic AdamW update terms (per parameter, per device after sharding):
+# m/v/master read+write fp32 (24B) + grad read fp32 (4B) + casts ~= 40B,
+# ~12 flops. Tiny vs the matmul terms; folded in analytically because the
+# probe measures value_and_grad only (so microbatch scaling stays exact).
+_OPT_BYTES_PER_PARAM = 40.0
+_OPT_FLOPS_PER_PARAM = 12.0
+
+
+def analytic_memory_bytes(cfg, kind: str, batch: int, seq: int,
+                          mesh) -> float:
+    """First-principles per-device HBM-traffic floor, assuming the Pallas
+    attention/SSM kernels (no score materialization) and TPU-grade fusion:
+
+      train:   M * L * [4 * P_layer(bf16)/dev + 10 * resid] + head + opt
+      prefill: L * [P_layer(bf16)/TP + 6 * resid] + cache write
+      decode:  all params once + full cache read/write + small vectors
+
+    resid = one (B_mb, S, D) bf16 pass per device. Reported alongside the
+    measured (XLA-fallback attention) bytes so both bounds are visible.
+    """
+    dev = mesh.size
+    tp = mesh.shape["model"]
+    dp = dev // tp
+    P = cfg.param_count() * 2.0                     # bf16 bytes
+    L = max(cfg.n_layers, 1)
+    P_layer = P / L
+    if kind == "train":
+        M = max(cfg.microbatches, 1)
+        b_loc = max(batch // M // dp, 1)
+        resid = b_loc * seq * cfg.d_model * 2.0
+        per_layer = 4.0 * P_layer / dev * tp + 10.0 * resid
+        head = 3.0 * (cfg.vocab_size * cfg.d_model * 2.0) / tp \
+            + 2.0 * b_loc * seq * (cfg.vocab_size / tp) * 2.0
+        opt = _OPT_BYTES_PER_PARAM * cfg.param_count() / dev
+        return M * (L * per_layer + head) + opt
+    if kind == "prefill":
+        b_loc = max(batch // dp, 1)
+        resid = b_loc * seq * cfg.d_model * 2.0
+        kv_write = (2.0 * b_loc * seq * cfg.n_kv_heads * cfg.hd * 2.0)
+        return L * (P_layer / tp + 6.0 * resid + kv_write) \
+            + (cfg.vocab_size * cfg.d_model * 2.0) / tp
+    # decode
+    b_loc = max(batch // dp, 1) if batch >= dp else batch
+    cache = 2.0 * L * b_loc * (seq / tp) * cfg.n_kv_heads * cfg.hd * 2.0
+    return P / tp + cache
+
+
+def _scan_unit_info(cfg):
+    """(full_units, override_fn(units) -> cfg overrides) for the probe."""
+    if cfg.family == "hybrid":
+        def ov(u):
+            return {"n_macro_blocks": u,
+                    "n_layers": u * cfg.mamba_per_block
+                    + cfg.tail_mamba_layers,
+                    "scan_layers": False}
+        return cfg.n_macro_blocks, ov
+    if cfg.attn_pattern == "local_global":
+        def ov(u):
+            return {"n_layers": 2 * u, "scan_layers": False}
+        return cfg.n_layers // 2, ov
+
+    def ov(u):
+        return {"n_layers": u, "scan_layers": False}
+    return cfg.n_layers, ov
+
+
+def _probe_compile(cfg_p, shape, mesh, batch: int, parallelism: str = "tp",
+                   prefill_lastonly: bool = False):
+    """Compile one probe variant; returns (flops, bytes, coll_s, coll)."""
+    model = build_model(cfg_p)
+    ctx, sh = assemble(model, mesh, shape.kind, batch, shape.seq,
+                       unroll_scans=True, parallelism=parallelism)
+    abstract_params = model.abstract_params()
+    if shape.kind == "train":
+        def grad_fn(params, b):
+            return jax.value_and_grad(
+                lambda p: model.loss(p, b, ctx))(params)
+        batch_abs = model.batch_shapes(batch, shape.seq)
+        lowered = jax.jit(
+            grad_fn, in_shardings=(sh["opt_params"], sh["batch"]),
+            out_shardings=(None, sh["opt_params"])).lower(
+            abstract_params, batch_abs)
+    elif shape.kind == "prefill":
+        bf16_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            abstract_params)
+        step_fn = build_prefill_step(model, ctx, last_only=prefill_lastonly)
+        batch_abs = model.batch_shapes(batch, shape.seq)
+        lowered = jax.jit(step_fn, in_shardings=(sh["params"], sh["batch"])
+                          ).lower(bf16_params, batch_abs)
+    else:
+        bf16_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            abstract_params)
+        abstract_cache = model.abstract_cache(batch, shape.seq)
+        step_fn = build_serve_step(model, ctx)
+        toks = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(sh["params"], sh["cache"], sh["tokens"],
+                          sh["tokens"]),
+            out_shardings=(None, sh["cache"])).lower(
+            bf16_params, abstract_cache, toks, toks)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            collective_seconds(coll), coll)
+
+
+def probed_costs(cfg, shape, mesh, parallelism: str = "tp",
+                 prefill_lastonly: bool = False) -> dict | None:
+    """Trip-count-corrected per-device (flops, bytes, collective_s)."""
+    if cfg.family == "ssm":
+        return None            # xlstm is python-unrolled: raw costs exact
+    units_full, ov = _scan_unit_info(cfg)
+    M = cfg.microbatches if shape.kind == "train" else 1
+    batch = shape.batch // M if shape.kind == "train" else shape.batch
+    vals = []
+    for u in (1, 2):
+        cfg_p = _dc.replace(cfg, **ov(u))
+        vals.append(_probe_compile(cfg_p, shape, mesh, batch, parallelism,
+                                   prefill_lastonly))
+    (f1, b1, c1, _), (f2, b2, c2, coll2) = vals
+    per = (f2 - f1, b2 - b1, c2 - c1)
+    fixed = (f1 - per[0], b1 - per[1], c1 - per[2])
+    flops = M * (fixed[0] + per[0] * units_full)
+    bytes_ = M * (fixed[1] + per[1] * units_full)
+    coll_s = M * (fixed[2] + per[2] * units_full)
+    if shape.kind == "train":
+        n_dev_params = cfg.param_count() / mesh.size
+        flops += _OPT_FLOPS_PER_PARAM * n_dev_params
+        bytes_ += _OPT_BYTES_PER_PARAM * n_dev_params
+    return {"flops": flops, "bytes_accessed": bytes_,
+            "collective_s": coll_s,
+            "probe_points": {"u1": {"flops": f1, "bytes": b1, "coll_s": c1},
+                             "u2": {"flops": f2, "bytes": b2, "coll_s": c2}},
+            "units_full": units_full, "microbatches": M}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None,
+             parallelism: str = "tp", no_probes: bool = False,
+             prefill_lastonly: bool = False) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = build_model(cfg)
+    ctx, sh = assemble(model, mesh, shape.kind, shape.batch, shape.seq,
+                       parallelism=parallelism)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "batch": shape.batch, "seq": shape.seq,
+        "devices": int(mesh.size), "parallelism": parallelism,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "rules": {k: list(v) if isinstance(v, tuple) else v
+                  for k, v in ctx.rules.items()},
+    }
+
+    abstract_params = model.abstract_params()
+    if shape.kind == "train":
+        optimizer = AdamW()
+        abstract_opt = jax.eval_shape(optimizer.init, abstract_params)
+        step_fn = build_train_step(model, optimizer, ctx)
+        batch_abs = model.batch_shapes(shape.batch, shape.seq)
+        opt_sh = opt_state_shardings(sh["opt_params"], mesh)
+        in_sh = (sh["opt_params"], opt_sh, sh["batch"])
+        out_sh = (sh["opt_params"], opt_sh, None)
+        # donate params + opt state: updates alias in place (halves the
+        # optimizer-state residency, exactly as a real trainer runs)
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          out_shardings=out_sh,
+                          donate_argnums=(0, 1)).lower(
+            abstract_params, abstract_opt, batch_abs)
+    elif shape.kind == "prefill":
+        bf16_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            abstract_params)
+        step_fn = build_prefill_step(model, ctx, last_only=prefill_lastonly)
+        batch_abs = model.batch_shapes(shape.batch, shape.seq)
+        lowered = jax.jit(step_fn, in_shardings=(sh["params"], sh["batch"])
+                          ).lower(bf16_params, batch_abs)
+    else:                                   # decode
+        bf16_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            abstract_params)
+        abstract_cache = model.abstract_cache(shape.batch, shape.seq)
+        step_fn = build_serve_step(model, ctx)
+        toks = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+        in_sh = (sh["params"], sh["cache"], sh["tokens"], sh["tokens"])
+        out_sh = (None, sh["cache"])
+        # donate the KV cache: the one-token update aliases in place
+        # instead of double-buffering the (possibly 500k-long) cache
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          out_shardings=out_sh,
+                          donate_argnums=(1,)).lower(
+            bf16_params, abstract_cache, toks, pos)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # ---- memory ----
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        record["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes_estimate": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        }
+    # ---- cost ----
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    record["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+    # ---- collectives ----
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    record["collectives"] = coll
+    record["hlo_lines"] = hlo.count("\n")
+
+    # ---- roofline (trip-count-corrected via probes; single-pod only) ----
+    raw_coll_s = collective_seconds(coll)
+    record["raw_cost"] = {"flops": flops, "bytes_accessed": bytes_acc,
+                          "collective_s": raw_coll_s}
+    corrected = None
+    if mesh_kind == "single" and not no_probes:
+        corrected = probed_costs(cfg, shape, mesh, parallelism,
+                                 prefill_lastonly)
+    if corrected is not None:
+        flops = corrected["flops"]
+        bytes_acc = corrected["bytes_accessed"]
+        coll_s = corrected["collective_s"]
+        record["probe"] = {k: corrected[k] for k in
+                           ("probe_points", "units_full", "microbatches")}
+    else:
+        coll_s = raw_coll_s
+    record["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+    comp_s = flops / PEAK_FLOPS
+    mem_s = bytes_acc / HBM_BW
+    mem_floor_s = analytic_memory_bytes(
+        cfg, shape.kind, shape.batch, shape.seq, mesh) / HBM_BW
+    mf = model_flops(cfg, shape.kind, shape.batch, shape.seq)
+    per_dev_mf = mf / mesh.size
+    terms = {"compute_s": comp_s, "memory_s": mem_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    record["roofline"] = {
+        **terms,
+        "memory_floor_s": mem_floor_s,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_device": per_dev_mf,
+        "useful_compute_ratio": (per_dev_mf / flops) if flops else 0.0,
+        "bound_step_s": max(terms.values()),
+        "roofline_fraction": (per_dev_mf / PEAK_FLOPS)
+        / max(max(terms.values()), 1e-30),
+    }
+    record["timings"] = {"lower_s": round(t_lower, 1),
+                         "compile_s": round(t_compile, 1),
+                         "total_s": round(time.time() - t0, 1)}
+    record["ok"] = True
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--parallelism", default="tp",
+                    choices=["tp", "tp-sp", "fsdp", "vtp", "dp", "ring"])
+    ap.add_argument("--set", default="", dest="overrides",
+                    help="cfg overrides, e.g. microbatches=8,remat_policy=dots")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result key (perf iterations)")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip cost probes (memory-only iterations)")
+    ap.add_argument("--prefill-lastonly", action="store_true",
+                    help="prefill computes the vocab head on the last "
+                         "position only (perf lever)")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    for kv in filter(None, args.overrides.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = (int(v) if v.lstrip("-").isdigit()
+                        else (v == "True" if v in ("True", "False") else v))
+
+    archs = list(ARCH_NAMES) if (args.arch == "all" or args.all) \
+        else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        shapes = [s.name for s in shapes_for(arch)]
+        if args.shape != "all":
+            shapes = [s for s in args.shape.split(",") if s in shapes]
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape_name}|{mesh_kind}"
+                if args.tag:
+                    key += f"#{args.tag}"
+                if key in results and results[key].get("ok") \
+                        and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind,
+                                   overrides=overrides or None,
+                                   parallelism=args.parallelism,
+                                   no_probes=args.no_probes,
+                                   prefill_lastonly=args.prefill_lastonly)
+                    rec["tag"] = args.tag
+                    rl = rec["roofline"]
+                    print(f"[ ok ] {key}: dominant={rl['dominant']} "
+                          f"compute={rl['compute_s']:.4f}s "
+                          f"memory={rl['memory_s']:.4f}s "
+                          f"collective={rl['collective_s']:.4f}s "
+                          f"frac={rl['roofline_fraction']:.3f} "
+                          f"(compile {rec['timings']['compile_s']}s)",
+                          flush=True)
+                except Exception as e:                     # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {key}: {rec['error']}", flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"dry-run complete: {n_ok}/{len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Per-(arch x shape x mesh) sharding assembly.
+
+Three rule tables (logical axis -> mesh axes) drive everything:
+
+* **activation rules** — threaded through model code via ModelContext;
+* **parameter rules** — how the model weights land (megatron TP layout);
+* **optimizer rules** — ZeRO-style: parameter rules *plus* ``d_model`` over
+  the ``data`` axis, so fp32 master params + Adam moments are fully
+  sharded over the whole mesh (a 34B model's optimizer state drops from
+  25.5 GiB/chip replicated to ~1.6 GiB/chip).
+
+Divisibility fallbacks are computed here (e.g. long_500k's batch=1 cannot
+shard over ``data`` — the KV cache seq dim takes every mesh axis instead;
+xlstm's 4 heads cannot TP-shard — training batch spreads over
+``data x model``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding import ModelContext, default_rules
+from repro.models.zoo import Model
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _divisible_prefix(mesh: Mesh, candidates: tuple, size: int) -> tuple:
+    """Longest prefix of candidate axes whose product divides ``size``."""
+    out = []
+    for a in candidates:
+        trial = out + [a]
+        if size % _axes_size(mesh, tuple(trial)) == 0:
+            out = trial
+        else:
+            break
+    return tuple(out)
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh, kind: str, batch: int,
+               seq_parallel: bool = False,
+               parallelism: str = "tp") -> dict:
+    """parallelism:
+      "tp"    - megatron TP over `model` + DP over `pod`x`data` (baseline)
+      "tp-sp" - TP + sequence-parallel residuals (all-reduce ->
+                reduce-scatter/all-gather pairs)
+      "fsdp"  - pure data parallelism over EVERY axis + fully-sharded
+                params (ZeRO-3-style weight gathering per layer)
+    """
+    if parallelism == "tp-sp":
+        seq_parallel = True
+    multi_pod = "pod" in mesh.axis_names
+    rules = default_rules(multi_pod=multi_pod, seq_parallel=seq_parallel)
+    dp_candidates = ("pod", "data") if multi_pod else ("data",)
+    if parallelism == "fsdp" or (cfg.family == "ssm" and kind == "train"):
+        # fsdp: batch over the model axis too; xlstm: 4 heads can't
+        # TP-shard regardless
+        dp_candidates = dp_candidates + ("model",)
+    batch_axes = _divisible_prefix(mesh, dp_candidates, batch)
+    rules["batch"] = batch_axes if batch_axes else None
+    # heads: only shard if divisible
+    if cfg.n_heads % mesh.shape["model"] != 0 or "model" in (batch_axes or ()):
+        rules["heads"] = None
+    if kind == "decode":
+        # KV-cache seq dim takes every mesh axis the batch doesn't use
+        leftover = tuple(a for a in mesh.axis_names
+                         if a not in (batch_axes or ()))
+        rules["kv_seq"] = leftover if leftover else None
+    # ssm heads shardable?
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // max(cfg.ssm_head_dim, 1) if cfg.ssm_head_dim else 0
+    if cfg.family == "ssm":
+        nh = cfg.n_heads
+    if nh and nh % mesh.shape["model"] != 0:
+        rules["ssm_heads"] = None
+    if "model" in (batch_axes or ()):
+        rules["ssm_heads"] = None
+        rules["d_ff"] = None
+        rules["vocab"] = None
+        rules["heads"] = None
+    if parallelism == "dp":
+        # pure data parallelism: model axis idles (replicated compute) —
+        # zero TP collectives; useful when TP layouts reshard-thrash
+        rules["d_ff"] = None
+        rules["heads"] = None
+        rules["ssm_heads"] = None
+        rules["vocab"] = None
+    if parallelism == "ring":
+        # sequence parallelism for SSM/xLSTM: S over `model`; projections
+        # are position-wise (zero comm); the mLSTM inter-chunk state
+        # crosses ranks via the affine all_gather exchange (shard_map)
+        rules["seq"] = "model"
+        rules["d_ff"] = None
+        rules["ssm_heads"] = None
+        rules["heads"] = None
+        rules["vocab"] = None
+    if parallelism == "vtp":
+        # mLSTM value-dim TP: q/k replicated, v (and the matrix-memory
+        # value dim) sharded over `model`; only down_proj all-reduces
+        rules["xlstm_hd"] = "model"
+        rules["d_ff"] = None
+        rules["ssm_heads"] = None
+    rules["_parallelism"] = parallelism
+    return rules
+
+
+def zero_rules(rules: dict) -> dict:
+    """Optimizer-state / master-param rules: fully shard the largest
+    remaining dim. Under TP: d_model over `data` (params: TP x ZeRO-data).
+    Under FSDP: d_model over (data, model) — fully sharded everywhere."""
+    out = dict(rules)
+    if rules.get("_parallelism") == "fsdp":
+        out["d_model"] = ("data", "model")
+    else:
+        out["d_model"] = "data"
+    return out
+
+
+def _spec_from_names(names, rules: dict) -> P:
+    """Resolve logical names to a PartitionSpec, de-duplicating mesh axes:
+    earlier dims win (e.g. an expert-sharded dim keeps `model`; a later
+    ZeRO d_model entry then sheds `model` and keeps `data`)."""
+    used: set = set()
+    out = []
+    for n in names:
+        r = rules.get(n) if n is not None else None
+        if r is None:
+            out.append(None)
+            continue
+        axes = (r,) if isinstance(r, str) else tuple(r)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def tree_shardings(spec_names_tree, rules: dict, mesh: Mesh):
+    """Map a pytree of logical-axis-name tuples to NamedShardings."""
+    def conv(names):
+        return NamedSharding(mesh, _spec_from_names(names, rules))
+    return jax.tree.map(conv, spec_names_tree,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def assemble(model: Model, mesh: Mesh, kind: str, batch: int, seq: int,
+             seq_parallel: bool = False, attention_impl: str = "auto",
+             moe_impl: str = "auto", unroll_scans: bool = False,
+             parallelism: str = "tp", rules: Optional[dict] = None):
+    """Returns (ctx, shardings dict) for one dry-run / launch cell."""
+    cfg = model.cfg
+    rules = rules or make_rules(cfg, mesh, kind, batch, seq_parallel,
+                                parallelism)
+    ctx = ModelContext(mesh=mesh, rules=rules,
+                       attention_impl=attention_impl, moe_impl=moe_impl,
+                       unroll_scans=unroll_scans)
+    param_sh = tree_shardings(model.param_specs(), rules, mesh)
+    opt_param_sh = tree_shardings(model.param_specs(), zero_rules(rules),
+                                  mesh)
+    batch_sh = tree_shardings(model.batch_logical_axes(), rules, mesh)
+    out = {"params": param_sh, "opt_params": opt_param_sh, "batch": batch_sh}
+    if kind == "decode":
+        out["cache"] = tree_shardings(model.cache_specs(), rules, mesh)
+        out["tokens"] = NamedSharding(mesh, _spec_from_names(
+            ("batch",), rules))
+    return ctx, out
+
+
+def opt_state_shardings(opt_param_sh, mesh: Mesh):
+    """AdamW state shardings: moments follow the (ZeRO) param shardings."""
+    return {
+        "m": opt_param_sh,
+        "v": opt_param_sh,
+        "step": NamedSharding(mesh, P()),
+    }

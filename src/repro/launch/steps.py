@@ -1,0 +1,80 @@
+"""Train / serve step builders (the functions the dry-run lowers and the
+drivers execute).
+
+train_step: gradient-accumulation microbatching via ``lax.scan`` (the
+  per-arch ``microbatches`` knob is the main memory lever), fp32 master
+  params with on-the-fly bf16 casts inside the model, AdamW update. Under
+  pjit the data-parallel gradient mean and the ZeRO gathers/scatters are
+  GSPMD-inserted from the sharding annotations — the cross-pod all-reduce
+  is the paper's broadcast&gather motif (DESIGN.md §2).
+
+serve_step: one decode step against the sharded cache; prefill_step: full
+  forward returning last-position logits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ModelContext
+from repro.models.zoo import Model
+from repro.optim.adamw import AdamW
+
+
+def build_loss_fn(model: Model, ctx: ModelContext):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, ctx)
+    return loss_fn
+
+
+def build_train_step(model: Model, optimizer: AdamW, ctx: ModelContext,
+                     microbatches: Optional[int] = None):
+    M = microbatches or model.cfg.microbatches
+    loss_fn = build_loss_fn(model, ctx)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if M > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                loss, grads = grad_fn(params, mb)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                    gacc, grads)
+                return (gacc, lacc + loss), None
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]),
+                batch)
+            gz = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(micro, (gz, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+        else:
+            loss, grads = grad_fn(params, batch)
+        new_params, new_opt, metrics = optimizer.update(grads, opt_state,
+                                                        params)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_serve_step(model: Model, ctx: ModelContext):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ctx)
+    return serve_step
+
+
+def build_prefill_step(model: Model, ctx: ModelContext,
+                       last_only: bool = False):
+    def prefill_step(params, batch):
+        if last_only:
+            # optimized: vocab head computed for the final position only
+            return model.forward(params, batch, ctx, last_only=True)[:, 0]
+        logits = model.forward(params, batch, ctx)
+        return logits[:, -1]
+    return prefill_step

@@ -1,0 +1,244 @@
+"""zamba2-style hybrid LM: Mamba2 backbone + one *shared* transformer block
+applied periodically (weights reused at every application — Zamba2's core
+parameter-efficiency trick).
+
+Layout: ``n_macro_blocks`` macro-blocks of ``mamba_per_block`` Mamba2 layers
+each, the shared attention+MLP block applied after every macro-block, then
+``tail_mamba_layers`` trailing Mamba2 layers.
+zamba2-7b: 13 x 6 + shared-attn + 3 = 81 Mamba2 layers, 13 attention
+applications (each application has its own KV cache at serve time).
+
+Simplification vs the released model (documented in DESIGN.md): the shared
+block consumes the residual stream directly (no concat-with-embedding input
+or per-application LoRA deltas).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.mamba2 import (
+    init_mamba2_params, init_mamba2_state, mamba2_mixer)
+from repro.models.sharding import ModelContext
+from repro.models.transformer import _cache_write, transformer_block
+
+
+def init_hybrid_params(key, cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k_embed, k_mamba, k_attn, k_head = jax.random.split(key, 4)
+    n_mamba = cfg.n_layers
+    mkeys = jax.random.split(k_mamba, n_mamba)
+    per_layer = [init_mamba2_params(
+        mk, D, state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand, conv_kernel=cfg.conv_kernel)
+        for mk in mkeys]
+    mamba_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    aks = iter(jax.random.split(k_attn, 8))
+    def dn(shape, scale=0.02):
+        return L.dense_init(next(aks), shape, scale)
+    shared = {
+        "attn_norm": jnp.zeros((D,)),
+        "wq": dn((D, H * hd)),
+        "wk": dn((D, KV * hd)),
+        "wv": dn((D, KV * hd)),
+        "wo": dn((H * hd, D)),
+        "mlp_norm": jnp.zeros((D,)),
+        "wi": dn((D, 2 * cfg.d_ff)),
+        "wo_mlp": dn((cfg.d_ff, D)),
+    }
+    return {
+        "embed": L.dense_init(k_embed, (V, D)),
+        "mamba": mamba_stack,
+        "shared_attn": shared,
+        "final_norm": jnp.zeros((D,)),
+        "lm_head": L.dense_init(k_head, (D, V)),
+    }
+
+
+def hybrid_param_specs(cfg: ArchConfig) -> dict:
+    d_in_axes = ("layers", "d_model", None)
+    return {
+        "embed": ("vocab", "d_model"),
+        "mamba": {
+            "norm": ("layers", "d_model"),
+            "in_proj": d_in_axes,
+            "conv": ("layers", "conv", None),
+            "A_log": ("layers", "ssm_heads"),
+            "D": ("layers", "ssm_heads"),
+            "dt_bias": ("layers", "ssm_heads"),
+            "out_norm": ("layers", None),
+            "out_proj": ("layers", None, "d_model"),
+        },
+        "shared_attn": {
+            "attn_norm": ("d_model",),
+            "wq": ("d_model", "heads"),
+            "wk": ("d_model", "kv_heads"),
+            "wv": ("d_model", "kv_heads"),
+            "wo": ("heads", "d_model"),
+            "mlp_norm": ("d_model",),
+            "wi": ("d_model", "d_ff"),
+            "wo_mlp": ("d_ff", "d_model"),
+        },
+        "final_norm": ("d_model",),
+        "lm_head": ("d_model", "vocab"),
+    }
+
+
+def _split_stacks(params, cfg: ArchConfig):
+    """(81, ...) mamba stack -> macro (13, 6, ...) + tail (3, ...)."""
+    nb, per = cfg.n_macro_blocks, cfg.mamba_per_block
+    head = nb * per
+    macro = jax.tree.map(lambda a: a[:head].reshape(nb, per, *a.shape[1:]),
+                         params["mamba"])
+    tail = jax.tree.map(lambda a: a[head:], params["mamba"])
+    return macro, tail
+
+
+def hybrid_forward(params, batch, cfg: ArchConfig,
+                   ctx: Optional[ModelContext] = None,
+                   last_only: bool = False) -> jax.Array:
+    ctx = ctx or ModelContext()
+    x = L.embed(batch["tokens"], params["embed"].astype(jnp.bfloat16), ctx)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    macro, tail = _split_stacks(params, cfg)
+    shared = params["shared_attn"]
+
+    def mamba_body(x, p):
+        out, _ = mamba2_mixer(x, p, cfg, ctx)
+        return x + out, None
+
+    def macro_body(x, p_macro):
+        x, _ = jax.lax.scan(mamba_body, x, p_macro)
+        x = transformer_block(x, shared, 0, cfg, ctx, positions)
+        return x, None
+
+    body = jax.checkpoint(macro_body) if cfg.remat else macro_body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, macro)
+        x, _ = jax.lax.scan(mamba_body, x, tail)
+    else:
+        for i in range(cfg.n_macro_blocks):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], macro))
+        for i in range(cfg.tail_mamba_layers):
+            x, _ = mamba_body(x, jax.tree.map(lambda a: a[i], tail))
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = L.unembed(x, params["lm_head"], cfg.final_logit_softcap, ctx)
+    if ctx.distributed:
+        logits = ctx.shard(logits, "batch", "seq", "vocab")
+    return logits
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    st = init_mamba2_state(batch, cfg, cfg.d_model)
+    n_mamba = cfg.n_layers
+    mamba_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_mamba, *a.shape)).copy(), st)
+    nb = cfg.n_macro_blocks
+    kv_shape = (nb, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "mamba": mamba_states,
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+    }
+
+
+def hybrid_cache_specs() -> dict:
+    kv = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "mamba": {
+            "conv": (None, "batch", None, None),
+            "ssm": (None, "batch", "ssm_heads", None, None),
+        },
+        "k": kv, "v": kv,
+    }
+
+
+def hybrid_decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                       ctx: Optional[ModelContext] = None):
+    ctx = ctx or ModelContext()
+    B = tokens.shape[0]
+    x = L.embed(tokens[:, None], params["embed"].astype(jnp.bfloat16), None)
+    macro, tail = _split_stacks(params, cfg)
+    shared = params["shared_attn"]
+    nb, per = cfg.n_macro_blocks, cfg.mamba_per_block
+    head = nb * per
+    mstates_macro = jax.tree.map(
+        lambda a: a[:head].reshape(nb, per, *a.shape[1:]), cache["mamba"])
+    mstates_tail = jax.tree.map(lambda a: a[head:], cache["mamba"])
+
+    def mamba_body(x, xs):
+        p, st = xs
+        out, st_new = mamba2_mixer(x, p, cfg, ctx, decode_state=st)
+        return x + out, st_new
+
+    def shared_attn_step(x, k_c, v_c):
+        h = L.rmsnorm(x, shared["attn_norm"])
+        q = (h @ shared["wq"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.hd)
+        k = (h @ shared["wk"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        v = (h @ shared["wv"].astype(h.dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.hd)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+        k_c = _cache_write(k_c, k[:, 0], pos)
+        v_c = _cache_write(v_c, v[:, 0], pos)
+        if ctx.distributed:
+            k_c = ctx.shard(k_c, "batch", "kv_seq", "kv_heads", "head_dim")
+            v_c = ctx.shard(v_c, "batch", "kv_seq", "kv_heads", "head_dim")
+        a = L.decode_attention(q[:, 0], k_c, v_c, pos, ctx=ctx)
+        x = x + (a.reshape(B, -1) @ shared["wo"].astype(x.dtype))[:, None]
+        h = L.rmsnorm(x, shared["mlp_norm"])
+        x = x + L.swiglu(h, shared["wi"], shared["wo_mlp"], ctx)
+        return x, k_c, v_c
+
+    def macro_body(x, xs):
+        p_macro, st_macro, k_c, v_c = xs
+        x, st_new = jax.lax.scan(mamba_body, x, (p_macro, st_macro))
+        x, k_c, v_c = shared_attn_step(x, k_c, v_c)
+        return x, (st_new, k_c, v_c)
+
+    if cfg.scan_layers:
+        x, (mstates_macro_new, k_new, v_new) = jax.lax.scan(
+            macro_body, x, (macro, mstates_macro, cache["k"], cache["v"]))
+        x, mstates_tail_new = jax.lax.scan(
+            mamba_body, x, (tail, mstates_tail))
+    else:
+        outs = []
+        for i in range(nb):
+            xs_i = jax.tree.map(lambda a: a[i],
+                                (macro, mstates_macro, cache["k"],
+                                 cache["v"]))
+            x, out_i = macro_body(x, xs_i)
+            outs.append(out_i)
+        mstates_macro_new, k_new, v_new = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *outs)
+        touts = []
+        for i in range(cfg.tail_mamba_layers):
+            xs_i = jax.tree.map(lambda a: a[i], (tail, mstates_tail))
+            x, st_i = mamba_body(x, xs_i)
+            touts.append(st_i)
+        mstates_tail_new = jax.tree.map(lambda *xs: jnp.stack(xs), *touts)
+
+    mamba_new = jax.tree.map(
+        lambda m, t: jnp.concatenate(
+            [m.reshape(head, *m.shape[2:]), t], axis=0),
+        mstates_macro_new, mstates_tail_new)
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    logits = L.unembed(x, params["lm_head"], cfg.final_logit_softcap, ctx)
+    return logits, {"mamba": mamba_new, "k": k_new, "v": v_new}

@@ -1,0 +1,268 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (three
+implementations), SwiGLU MLP, embeddings, losses.
+
+Attention implementations:
+
+* ``reference`` — materializes the full (S, T) score matrix. Oracle for
+  tests and the small-sequence default.
+* ``blocked``   — online-softmax over KV blocks via ``lax.scan``; O(S*block)
+  memory, used for long sequences in the lowered (dry-run) path where the
+  Pallas kernel cannot lower (CPU host backend has no Mosaic).
+* ``pallas``    — the TPU kernel in :mod:`repro.kernels` (fwd), enabled on
+  real TPU; validated against ``reference`` in interpret mode by tests.
+
+GQA layout decisions (TPU/GSPMD-friendly, see DESIGN.md):
+* train/prefill: K/V are *expanded* to the full head count so Q/K/V/O all
+  shard cleanly over the ``model`` axis by heads (no awkward grouped-dim
+  reshardings);
+* decode: grouped einsum against the KV cache with the *sequence* dimension
+  sharded over ``model`` — a distributed flash-decode (GSPMD turns the
+  masked softmax into partial max/sum + cross-shard combines).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ModelContext
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / activations
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating each KV head."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    reps = n_heads // kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int) -> jax.Array:
+    """(S, T) additive bias: 0 where visible, NEG_INF where masked."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_reference(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        logit_cap=0.0, scale=None,
+                        ctx: Optional[ModelContext] = None) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) -> (B,S,H,hd). Full score matrix."""
+    H, hd = q.shape[2], q.shape[3]
+    scale = (hd ** -0.5) if scale is None else scale
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if logit_cap > 0:
+        s = softcap(s, logit_cap)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+    return out
+
+
+def attention_blocked(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                      logit_cap=0.0, scale=None, block=1024,
+                      ctx: Optional[ModelContext] = None) -> jax.Array:
+    """Online-softmax over KV blocks (flash-attention recurrence in XLA).
+
+    Memory O(S*block) instead of O(S*T); exact same math as reference.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = (hd ** -0.5) if scale is None else scale
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if T % block != 0:
+        pad = block - T % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+        T += pad
+    nblk = T // block
+    qf = q.astype(jnp.float32) * scale
+    # scan carry: running max m (B,H,S), sum l (B,H,S), acc (B,H,S,hd)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    kb = k.reshape(B, nblk, block, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nblk, block)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, kp = blk
+        s = jnp.einsum("bshd,bthd->bhst", qf, k_j.astype(jnp.float32))
+        if logit_cap > 0:
+            s = softcap(s, logit_cap)
+        s = s + _mask_bias(q_pos, kp, causal, window)[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, v_j.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    unroll = nblk if (ctx is not None and ctx.unroll_scans) else 1
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+              logit_cap=0.0, scale=None,
+              ctx: Optional[ModelContext] = None) -> jax.Array:
+    """Dispatch by ctx.attention_impl (auto: blocked beyond threshold)."""
+    impl = ctx.attention_impl if ctx is not None else "auto"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(
+            q, k, v, q_pos, k_pos, causal=causal, window=window,
+            logit_cap=logit_cap, scale=scale,
+            interpret=ctx.interpret if ctx else True)
+    if impl == "auto":
+        thresh = ctx.blocked_threshold if ctx is not None else 2048
+        impl = "blocked" if q.shape[1] > thresh else "reference"
+    fn = attention_blocked if impl == "blocked" else attention_reference
+    return fn(q, k, v, q_pos, k_pos, causal=causal, window=window,
+              logit_cap=logit_cap, scale=scale, ctx=ctx)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, logit_cap=0.0,
+                     scale=None, ctx: Optional[ModelContext] = None
+                     ) -> jax.Array:
+    """One-token attention against a (possibly sequence-sharded) KV cache.
+
+    q: (B, H, hd); k_cache/v_cache: (B, T, KV, hd); pos: (B,) int32 index of
+    the current token (already written into the cache). Grouped einsum — no
+    KV expansion — so the cache's T dimension can be sharded over ``model``
+    (distributed flash-decode; GSPMD inserts the partial-softmax combines).
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    T = k_cache.shape[1]
+    scale = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache.astype(jnp.float32))
+    if logit_cap > 0:
+        s = softcap(s, logit_cap)
+    t_idx = jnp.arange(T)
+    ok = t_idx[None, :] <= pos[:, None]                       # (B, T)
+    if window > 0:
+        ok &= (pos[:, None] - t_idx[None, :]) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP / embeddings / loss
+# --------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wo: jax.Array,
+           ctx: Optional[ModelContext] = None) -> jax.Array:
+    """wi: (D, 2F) fused gate+up; wo: (F, D)."""
+    h = x @ wi.astype(x.dtype)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    if ctx is not None and x.ndim == 3:
+        h = ctx.shard(h, "batch", "attn_seq", "d_ff")
+    return h @ wo.astype(x.dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array,
+          ctx: Optional[ModelContext] = None) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    if ctx is not None and out.ndim == 3:
+        out = ctx.shard(out, "batch", "seq", "d_model")
+    return out
+
+
+def unembed(x: jax.Array, w: jax.Array, final_cap: float = 0.0,
+            ctx: Optional[ModelContext] = None) -> jax.Array:
+    """x: (..., D) @ w: (D, V) -> logits, optional final softcap (gemma2)."""
+    logits = x @ w.astype(x.dtype)
+    if final_cap > 0:
+        logits = softcap(logits.astype(jnp.float32), final_cap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (B,S,V) [vocab-shardable], labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        total = jnp.maximum(mask.sum(), 1)
+        return (nll * mask).sum() / total
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)

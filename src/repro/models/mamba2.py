@@ -1,0 +1,190 @@
+"""Mamba2 (State Space Duality) mixer — the SSM substrate for zamba2.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA Mamba2 kernel is a
+warp-specialized chunked scan; on TPU the same math maps naturally onto the
+MXU as the *chunked SSD dual form* — batched (chunk x chunk) GEMMs for the
+intra-chunk part plus a short `lax.scan` over chunk states for the
+inter-chunk recurrence. Heads shard over the ``model`` axis; the chunk
+dimension keeps every GEMM MXU-aligned. The perf-critical inner recurrence
+also exists as a Pallas kernel (:mod:`repro.kernels.ssm_scan`).
+
+Layer structure (simplified Mamba2 block):
+  in_proj: D -> [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+  causal depthwise conv(k=4) on [x|B|C]; SiLU
+  y = SSD(x, dt, A, B, C)  (chunked scan, heads = d_in / head_dim)
+  out = out_proj( rmsnorm(y) * silu(z) )
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.sharding import ModelContext
+
+CHUNK = 256
+
+
+def init_mamba2_params(key, d_model: int, *, state: int, head_dim: int,
+                       expand: int, conv_kernel: int) -> dict:
+    d_in = expand * d_model
+    nh = d_in // head_dim
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * state + nh
+    return {
+        "norm": jnp.zeros((d_model,), jnp.float32),
+        "in_proj": dense_init(ks[0], (d_model, proj_out)),
+        "conv": dense_init(ks[1], (conv_kernel, d_in + 2 * state), scale=0.1),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d_model)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_carry)
+    where carry holds the last K-1 inputs (decode state)."""
+    K = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_carry = xp[:, -(K - 1):, :]
+    return y, new_carry
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = CHUNK,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  (Bb, S, nh, hd)    values
+    dt: (Bb, S, nh)        softplus'd step sizes (>0)
+    A:  (nh,)              negative decay rates
+    B:  (Bb, S, N)         input maps   (single group, shared across heads)
+    C:  (Bb, S, N)         output maps
+    Returns (y (Bb,S,nh,hd), final_state (Bb,nh,hd,N)).
+    """
+    Bb, S, nh, hd = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(Bb, nc, chunk, nh, hd)
+    dtc = dt.reshape(Bb, nc, chunk, nh)
+    Bc = B.reshape(Bb, nc, chunk, N)
+    Cc = C.reshape(Bb, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                    # (Bb,nc,Q,nh) <= 0
+    cum = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+    total = cum[:, :, -1]                                # (Bb,nc,nh)
+
+    # ---- intra-chunk (dual / attention-like form) ----
+    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0.
+    # NB: mask the exponent BEFORE exp — masked (j > i) entries have
+    # positive exponents that overflow and poison gradients through where.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (Bb,nc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(mask, diff, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # (Bb,nc,Q,Q)
+    M = scores[..., None] * L                              # (Bb,nc,Q,Q,nh)
+    xdt = xc * dtc[..., None]                              # (Bb,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", M, xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)     # (Bb,nc,Q,nh)
+    states = jnp.einsum("bcjn,bcjh,bcjhd->bchdn",
+                        Bc, dtc * decay_to_end, xc)        # (Bb,nc,nh,hd,N)
+
+    # ---- inter-chunk recurrence over nc ----
+    s0 = (jnp.zeros((Bb, nh, hd, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st, tot = inp
+        s_new = s * jnp.exp(tot)[:, :, None, None] + st
+        return s_new, s
+
+    (final, prev_states) = jax.lax.scan(
+        step, s0,
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         total.transpose(1, 0, 2)))
+    prev = prev_states.transpose(1, 0, 2, 3, 4)            # state BEFORE chunk c
+
+    y_inter = jnp.einsum("bcin,bchdn,bcih->bcihd",
+                         Cc, prev.astype(Cc.dtype),
+                         jnp.exp(cum).astype(Cc.dtype))
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hd)
+    return y, final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token SSD update.
+    x: (Bb, nh, hd); dt: (Bb, nh); B,C: (Bb, N); state: (Bb, nh, hd, N).
+    Returns (y (Bb,nh,hd), new_state)."""
+    dA = jnp.exp(dt * A[None, :])                          # (Bb, nh)
+    upd = jnp.einsum("bn,bh,bhd->bhdn", B, dt, x)          # dt broadcast: (Bb,nh)
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhdn->bhd", C, new_state)
+    return y, new_state
+
+
+def mamba2_mixer(x, params, cfg, ctx: Optional[ModelContext] = None,
+                 decode_state: Optional[dict] = None):
+    """Full Mamba2 block. x: (Bb, S, D).
+    decode_state: None (train/prefill) or {"conv": (Bb,K-1,Cc), "ssm": ...}
+    Returns (y, new_decode_state)."""
+    Bb, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+    N = cfg.ssm_state
+    h = rmsnorm(x, params["norm"])
+    proj = h @ params["in_proj"].astype(h.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    carry = decode_state["conv"] if decode_state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv"].astype(h.dtype),
+                                      carry)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(Bb, S, nh, hd)
+    if ctx is not None:
+        xh = ctx.shard(xh, "batch", "seq", "ssm_heads", "head_dim")
+    if decode_state is None:
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                               Bm.astype(jnp.float32),
+                               Cm.astype(jnp.float32),
+                               chunk=min(CHUNK, S))
+        new_state = {"conv": new_conv, "ssm": final}
+    else:
+        y1, new_ssm = ssd_decode_step(
+            xh[:, 0].astype(jnp.float32), dt[:, 0], A,
+            Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32),
+            decode_state["ssm"])
+        y = y1[:, None]
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bb, S, d_in).astype(x.dtype)
+    y = rmsnorm(y, params["out_norm"]) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, new_state
+
+
+def init_mamba2_state(batch: int, cfg, d_model: int) -> dict:
+    d_in = cfg.ssm_expand * d_model
+    nh = d_in // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1,
+                           d_in + 2 * cfg.ssm_state), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,105 @@
+"""Logical-axis sharding for the model zoo (GSPMD via sharding constraints).
+
+Model code annotates tensors with *logical* axis names; a rule table maps
+them to mesh axes. This is the MaxText/TPU-idiomatic megatron layout:
+
+* batch        -> ("pod", "data")   pure DP across pods + data axis
+* heads/d_ff/
+  vocab/experts-> "model"           tensor/expert parallelism
+* kv_seq       -> "model"           decode: sequence-sharded KV cache
+                                    (distributed flash-decode)
+* seq          -> None (or "model" under sequence parallelism)
+
+The rules are swappable per experiment — the §Perf hillclimb iterates on
+exactly this table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def default_rules(multi_pod: bool = False, seq_parallel: bool = False,
+                  decode_cache_axis: str = "model") -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": "model" if seq_parallel else None,
+        # seq dim INSIDE attention/MLP (Megatron-SP keeps it unsharded
+        # there; the residual boundary re-shards via RS/AG)
+        "attn_seq": None,
+        "kv_seq": decode_cache_axis,      # decode-time KV cache sharding
+        "d_model": None,
+        "heads": "model",
+        "kv_heads": None,                 # GQA: few KV heads -> replicate
+        "head_dim": None,
+        "d_ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "capacity": None,
+        "layers": None,
+        "ssm_heads": "model",
+        "state": None,
+        "conv": None,
+        "xlstm_hd": None,      # mLSTM value-dim TP (perf lever)
+    }
+
+
+@dataclasses.dataclass
+class ModelContext:
+    """Execution context threaded through model code."""
+
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+    attention_impl: str = "auto"      # reference | blocked | pallas | auto
+    moe_impl: str = "auto"            # dense | ep | auto
+    interpret: bool = True            # pallas interpret mode (CPU)
+    blocked_threshold: int = 2048     # seq len above which "auto" -> blocked
+    # cost probes: unroll inner scans so XLA cost analysis counts every
+    # iteration (lax.scan bodies are otherwise counted once)
+    unroll_scans: bool = False
+
+    @property
+    def distributed(self) -> bool:
+        return self.mesh is not None and self.rules is not None
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        """Resolve logical names to a PartitionSpec, de-duplicating mesh
+        axes (earlier dims win — e.g. under sequence parallelism a
+        (batch, seq, vocab) constraint keeps `model` on seq and sheds it
+        from vocab)."""
+        assert self.rules is not None
+        used: set = set()
+        resolved = []
+        for ax in logical_axes:
+            r = self.rules.get(ax) if ax is not None else None
+            if r is None:
+                resolved.append(None)
+                continue
+            axes = (r,) if isinstance(r, str) else tuple(r)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            resolved.append(axes[0] if len(axes) == 1
+                            else (axes if axes else None))
+        return P(*resolved)
+
+    def shard(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        """Apply a sharding constraint by logical axis names (no-op when
+        running without a mesh, e.g. single-device smoke tests)."""
+        if not self.distributed:
+            return x
+        assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical_axes)))
+
+    def named_sharding(self, *logical_axes: Optional[str]) -> Optional[NamedSharding]:
+        if not self.distributed:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+CPU_CTX = ModelContext()

@@ -1,0 +1,350 @@
+"""Decoder-only transformer LM covering the dense, MoE, audio-backbone and
+VLM-backbone families.
+
+Structure choices made for compile-scale (40 dry-run cells x 512 devices):
+* parameters are stacked along a leading layer axis and the layer loop is a
+  ``lax.scan`` (keeps HLO size O(1) in depth);
+* ``jax.checkpoint`` (remat) wraps the block body;
+* per-layer static variation (gemma2's local/global alternation) rides the
+  scan as a boolean ``xs`` array — both mask variants are position
+  arithmetic, never materialized S x S;
+* gradient-accumulation microbatching lives in the training step
+  (:mod:`repro.launch.steps`), not here.
+
+``batch`` accepted forms (modality frontends are stubs per the brief):
+  {"tokens": (B,S) int32}                                  # LM
+  {"embeds": (B,S,D) bf16, "labels": (B,S)}                # audio (musicgen)
+  {"tokens": (B,S_text), "patch_embeds": (B,P,D)}          # vlm (pixtral)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.moe import moe_block
+from repro.models.sharding import ModelContext
+
+
+# --------------------------------------------------------------------------
+# init + specs
+# --------------------------------------------------------------------------
+
+
+def init_lm_params(key, cfg: ArchConfig) -> dict:
+    D, V, ff = cfg.d_model, cfg.vocab_size, cfg.d_ff
+    H, KV, hd, Lr = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    ks = iter(jax.random.split(key, 24))
+    def dn(shape, scale=0.02):
+        return L.dense_init(next(ks), shape, scale)
+    blocks = {
+        "attn_norm": jnp.zeros((Lr, D)),
+        "wq": dn((Lr, D, H * hd)),
+        "wk": dn((Lr, D, KV * hd)),
+        "wv": dn((Lr, D, KV * hd)),
+        "wo": dn((Lr, H * hd, D)),
+        "mlp_norm": jnp.zeros((Lr, D)),
+    }
+    if cfg.is_moe:
+        E, ns = cfg.n_experts, cfg.n_shared_experts
+        blocks["router"] = dn((Lr, D, E))
+        blocks["wi_e"] = dn((Lr, E, D, 2 * ff))
+        blocks["wo_e"] = dn((Lr, E, ff, D))
+        if ns > 0:
+            blocks["wi_s"] = dn((Lr, D, 2 * ff * ns))
+            blocks["wo_s"] = dn((Lr, ff * ns, D))
+    else:
+        blocks["wi"] = dn((Lr, D, 2 * ff))
+        blocks["wo_mlp"] = dn((Lr, ff, D))
+    if cfg.post_norms:
+        blocks["post_attn_norm"] = jnp.zeros((Lr, D))
+        blocks["post_mlp_norm"] = jnp.zeros((Lr, D))
+    params = {
+        "embed": dn((V, D)),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((D,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dn((D, V))
+    return params
+
+
+def lm_param_specs(cfg: ArchConfig) -> dict:
+    """Logical-axis names per parameter (same pytree structure as params)."""
+    blocks = {
+        "attn_norm": ("layers", "d_model"),
+        "wq": ("layers", "d_model", "heads"),
+        "wk": ("layers", "d_model", "kv_heads"),
+        "wv": ("layers", "d_model", "kv_heads"),
+        "wo": ("layers", "heads", "d_model"),
+        "mlp_norm": ("layers", "d_model"),
+    }
+    if cfg.is_moe:
+        blocks["router"] = ("layers", "d_model", None)
+        blocks["wi_e"] = ("layers", "experts", "d_model", None)
+        blocks["wo_e"] = ("layers", "experts", None, "d_model")
+        if cfg.n_shared_experts > 0:
+            blocks["wi_s"] = ("layers", "d_model", "d_ff")
+            blocks["wo_s"] = ("layers", "d_ff", "d_model")
+    else:
+        blocks["wi"] = ("layers", "d_model", "d_ff")
+        blocks["wo_mlp"] = ("layers", "d_ff", "d_model")
+    if cfg.post_norms:
+        blocks["post_attn_norm"] = ("layers", "d_model")
+        blocks["post_mlp_norm"] = ("layers", "d_model")
+    specs = {
+        "embed": ("vocab", "d_model"),
+        "blocks": blocks,
+        "final_norm": ("d_model",),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("d_model", "vocab")
+    return specs
+
+
+def _pair(blocks: dict, n_layers: int) -> dict:
+    """Stack (L, ...) params into (L/2, 2, ...) for the local/global
+    pair-scan (gemma2). Each sub-layer keeps a *static* window, so each
+    attention variant is computed exactly once (no compute-both-select)."""
+    return jax.tree.map(
+        lambda a: a.reshape(n_layers // 2, 2, *a.shape[1:]), blocks)
+
+
+# --------------------------------------------------------------------------
+# block
+# --------------------------------------------------------------------------
+
+
+def _attn_proj(x, p, cfg: ArchConfig, ctx: ModelContext, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, KV, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, KV, hd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.shard(q, "batch", "attn_seq", "heads", "head_dim")
+    return q, k, v
+
+
+def _moe_params(p: dict, cfg: ArchConfig) -> dict:
+    mp = {"router": p["router"], "wi": p["wi_e"], "wo": p["wo_e"]}
+    if cfg.n_shared_experts > 0:
+        mp["wi_s"] = p["wi_s"]
+        mp["wo_s"] = p["wo_s"]
+    return mp
+
+
+def transformer_block(x, p, window: int, cfg: ArchConfig, ctx: ModelContext,
+                      positions):
+    """Pre-norm block with a *static* attention window (0 = global)."""
+    B, S, D = x.shape
+    h = L.rmsnorm(x, p["attn_norm"])
+    q, k, v = _attn_proj(h, p, cfg, ctx, positions)
+    attn_out = L.attention(q, k, v, positions, positions, causal=True,
+                           window=window,
+                           logit_cap=cfg.attn_logit_softcap, ctx=ctx)
+    attn_out = attn_out.reshape(B, S, cfg.n_heads * cfg.hd)
+    attn_out = attn_out @ p["wo"].astype(x.dtype)
+    if cfg.post_norms:
+        attn_out = L.rmsnorm(attn_out, p["post_attn_norm"])
+    x = x + attn_out
+    h = L.rmsnorm(x, p["mlp_norm"])
+    if ctx is not None:
+        h = ctx.shard(h, "batch", "seq", "d_model")
+    if cfg.is_moe:
+        mlp_out = moe_block(
+            h, _moe_params(p, cfg),
+            k=cfg.experts_per_token, n_experts=cfg.n_experts,
+            n_shared=cfg.n_shared_experts,
+            capacity_factor=cfg.capacity_factor, ctx=ctx)
+    else:
+        mlp_out = L.swiglu(h, p["wi"], p["wo_mlp"], ctx)
+    if cfg.post_norms:
+        mlp_out = L.rmsnorm(mlp_out, p["post_mlp_norm"])
+    return x + mlp_out
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _input_embeds(params, batch, cfg: ArchConfig, ctx: ModelContext):
+    if "embeds" in batch:                     # audio stub frontend
+        x = batch["embeds"]
+    elif "patch_embeds" in batch:             # vlm stub frontend
+        tok = L.embed(batch["tokens"], params["embed"].astype(jnp.bfloat16),
+                      ctx)
+        x = jnp.concatenate([batch["patch_embeds"].astype(tok.dtype), tok],
+                            axis=1)
+    else:
+        x = L.embed(batch["tokens"], params["embed"].astype(jnp.bfloat16),
+                    ctx)
+    return x
+
+
+def lm_forward(params, batch, cfg: ArchConfig,
+               ctx: Optional[ModelContext] = None,
+               last_only: bool = False) -> jax.Array:
+    """Returns logits (B, S, V), or (B, 1, V) when ``last_only`` (prefill:
+    skips the full-sequence vocab head — V/H x less head compute and no
+    (B, S, V) logits materialization)."""
+    ctx = ctx or ModelContext()
+    x = _input_embeds(params, batch, cfg, ctx)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    paired = cfg.attn_pattern == "local_global"
+
+    if paired:
+        def body(x, p2):
+            p_loc = jax.tree.map(lambda a: a[0], p2)
+            p_glb = jax.tree.map(lambda a: a[1], p2)
+            x = transformer_block(x, p_loc, cfg.window, cfg, ctx, positions)
+            x = transformer_block(x, p_glb, 0, cfg, ctx, positions)
+            return x, None
+        stacked = _pair(params["blocks"], cfg.n_layers)
+        n_steps = cfg.n_layers // 2
+    else:
+        def body(x, p):
+            return transformer_block(x, p, 0, cfg, ctx, positions), None
+        stacked = params["blocks"]
+        n_steps = cfg.n_layers
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, stacked)
+    else:
+        for i in range(n_steps):
+            p_i = jax.tree.map(lambda a: a[i], stacked)
+            x, _ = body(x, p_i)
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = L.unembed(x, head, cfg.final_logit_softcap, ctx)
+    if ctx is not None and logits.ndim == 3:
+        logits = ctx.shard(logits, "batch", "seq", "vocab")
+    return logits
+
+
+# --------------------------------------------------------------------------
+# KV cache + decode
+# --------------------------------------------------------------------------
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs() -> dict:
+    ax = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+def lm_decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                   ctx: Optional[ModelContext] = None):
+    """One decode step. tokens: (B,) int32; pos: (B,) int32 current index.
+    Returns (logits (B, V), new_cache)."""
+    ctx = ctx or ModelContext()
+    B = tokens.shape[0]
+    x = L.embed(tokens[:, None], params["embed"].astype(jnp.bfloat16), None)
+    paired = cfg.attn_pattern == "local_global"
+
+    def sub_block(x, p, k_l, v_l, window: int):
+        h = L.rmsnorm(x, p["attn_norm"])
+        q, k, v = _attn_proj(h, p, cfg, ctx, pos[:, None])
+        # write current token's K/V into the (seq-sharded) cache
+        k_l = _cache_write(k_l, k[:, 0], pos)
+        v_l = _cache_write(v_l, v[:, 0], pos)
+        if ctx is not None:
+            k_l = ctx.shard(k_l, "batch", "kv_seq", "kv_heads", "head_dim")
+            v_l = ctx.shard(v_l, "batch", "kv_seq", "kv_heads", "head_dim")
+        a = L.decode_attention(q[:, 0], k_l, v_l, pos, window=window,
+                               logit_cap=cfg.attn_logit_softcap, ctx=ctx)
+        a = a.reshape(B, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+        if cfg.post_norms:
+            a = L.rmsnorm(a, p["post_attn_norm"])
+        x = x + a[:, None]
+        h = L.rmsnorm(x, p["mlp_norm"])
+        if cfg.is_moe:
+            m = moe_block(
+                h, _moe_params(p, cfg),
+                k=cfg.experts_per_token, n_experts=cfg.n_experts,
+                n_shared=cfg.n_shared_experts,
+                capacity_factor=cfg.capacity_factor, ctx=ctx)
+        else:
+            m = L.swiglu(h, p["wi"], p["wo_mlp"], ctx)
+        if cfg.post_norms:
+            m = L.rmsnorm(m, p["post_mlp_norm"])
+        return x + m, k_l, v_l
+
+    if paired:
+        def body(x, xs):
+            p2, k2, v2 = xs
+            outs_k, outs_v = [], []
+            for j, window in enumerate((cfg.window, 0)):
+                p_j = jax.tree.map(lambda a: a[j], p2)
+                x, k_j, v_j = sub_block(x, p_j, k2[j], v2[j], window)
+                outs_k.append(k_j)
+                outs_v.append(v_j)
+            return x, (jnp.stack(outs_k), jnp.stack(outs_v))
+        stacked = (_pair(params["blocks"], cfg.n_layers),
+                   cache["k"].reshape(cfg.n_layers // 2, 2,
+                                      *cache["k"].shape[1:]),
+                   cache["v"].reshape(cfg.n_layers // 2, 2,
+                                      *cache["v"].shape[1:]))
+        n_steps = cfg.n_layers // 2
+    else:
+        def body(x, xs):
+            p, k_l, v_l = xs
+            x, k_l, v_l = sub_block(x, p, k_l, v_l, 0)
+            return x, (k_l, v_l)
+        stacked = (params["blocks"], cache["k"], cache["v"])
+        n_steps = cfg.n_layers
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(body, x, stacked)
+    else:
+        ks, vs = [], []
+        for i in range(n_steps):
+            xs_i = jax.tree.map(lambda a: a[i], stacked)
+            x, (k_i, v_i) = body(x, xs_i)
+            ks.append(k_i); vs.append(v_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    k_new = k_new.reshape(cache["k"].shape)
+    v_new = v_new.reshape(cache["v"].shape)
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = L.unembed(x, head, cfg.final_logit_softcap, ctx)
+    return logits, {"k": k_new, "v": v_new}
+
+
+def _cache_write(cache_l, kv_t, pos):
+    """cache_l: (B, T, KV, hd); kv_t: (B, KV, hd); pos: (B,). Batched
+    scatter write — aliases in place under donation (the where/one-hot
+    alternative materializes a full cache copy per layer) and stays local
+    under a seq-sharded cache."""
+    B = cache_l.shape[0]
+    return cache_l.at[jnp.arange(B), pos].set(
+        kv_t.astype(cache_l.dtype), mode="drop")
+
+
+def lm_prefill(params, batch, cfg: ArchConfig,
+               ctx: Optional[ModelContext] = None):
+    """Prefill: full forward returning last-position logits. (The dry-run
+    prefill cell measures this lowering; cache build-out is exercised by the
+    serving runtime tests at small scale.)"""
+    logits = lm_forward(params, batch, cfg, ctx)
+    return logits[:, -1]

@@ -1,0 +1,163 @@
+"""Model zoo: one uniform interface over all assigned architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` bundle with:
+  init_params(key)          real parameter init (smoke-test scale)
+  abstract_params()         ShapeDtypeStruct pytree (dry-run, no allocation)
+  param_specs()             logical-axis names per parameter
+  forward(params, batch, ctx) -> logits
+  loss(params, batch, ctx) -> scalar CE
+  init_cache(batch, max_len) / abstract_cache(...)
+  cache_specs()             logical-axis names for the decode cache
+  decode_step(params, cache, tokens, pos, ctx) -> (logits, cache)
+  make_batch(key|specs)     concrete or abstract input batches per family
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import hybrid, transformer, xlstm
+from repro.models.layers import cross_entropy
+from repro.models.sharding import ModelContext
+
+TRANSFORMER_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init_params: Callable
+    param_specs: Callable
+    forward: Callable
+    init_cache: Callable
+    cache_specs: Callable
+    decode_step: Callable
+
+    # ---- derived helpers -------------------------------------------------
+    def loss(self, params, batch, ctx: Optional[ModelContext] = None):
+        logits = self.forward(params, batch, ctx)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm":
+            # loss only on text positions (image prefix is conditioning)
+            logits = logits[:, self.cfg.num_patches:]
+        return cross_entropy(logits, labels, batch.get("loss_mask"))
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init_params(jax.random.key(0)))
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    # ---- input construction ----------------------------------------------
+    def batch_shapes(self, batch: int, seq: int) -> dict:
+        """ShapeDtypeStructs for one training/prefill batch."""
+        cfg = self.cfg
+        f32 = jnp.bfloat16
+        i32 = jnp.int32
+        if cfg.family == "audio":
+            return {
+                "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), f32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            }
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch, seq - P), i32),
+                "patch_embeds": jax.ShapeDtypeStruct((batch, P, cfg.d_model),
+                                                     f32),
+                "labels": jax.ShapeDtypeStruct((batch, seq - P), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+
+    def batch_logical_axes(self) -> dict:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return {"embeds": ("batch", "seq", "d_model"),
+                    "labels": ("batch", "seq")}
+        if cfg.family == "vlm":
+            return {"tokens": ("batch", "seq"),
+                    "patch_embeds": ("batch", "seq", "d_model"),
+                    "labels": ("batch", "seq")}
+        return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+
+    def make_batch(self, key, batch: int, seq: int) -> dict:
+        """Concrete random batch (smoke tests / examples)."""
+        cfg = self.cfg
+        shapes = self.batch_shapes(batch, seq)
+        out = {}
+        for name, sds in shapes.items():
+            key, sub = jax.random.split(key)
+            if jnp.issubdtype(sds.dtype, jnp.integer):
+                out[name] = jax.random.randint(
+                    sub, sds.shape, 0, cfg.vocab_size, sds.dtype)
+            else:
+                out[name] = 0.02 * jax.random.normal(
+                    sub, sds.shape).astype(sds.dtype)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: transformer.init_lm_params(key, cfg),
+            param_specs=lambda: transformer.lm_param_specs(cfg),
+            forward=functools.partial(_tf_forward, cfg),
+            init_cache=lambda b, t: transformer.init_lm_cache(cfg, b, t),
+            cache_specs=lambda: transformer.cache_specs(),
+            decode_step=functools.partial(_tf_decode, cfg),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: hybrid.init_hybrid_params(key, cfg),
+            param_specs=lambda: hybrid.hybrid_param_specs(cfg),
+            forward=functools.partial(_hy_forward, cfg),
+            init_cache=lambda b, t: hybrid.init_hybrid_cache(cfg, b, t),
+            cache_specs=lambda: hybrid.hybrid_cache_specs(),
+            decode_step=functools.partial(_hy_decode, cfg),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: xlstm.init_xlstm_lm_params(key, cfg),
+            param_specs=lambda: xlstm.xlstm_param_specs(cfg),
+            forward=functools.partial(_xl_forward, cfg),
+            init_cache=lambda b, t: xlstm.init_xlstm_lm_cache(cfg, b, t),
+            cache_specs=lambda: xlstm.xlstm_cache_specs(cfg),
+            decode_step=functools.partial(_xl_decode, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _tf_forward(cfg, params, batch, ctx=None, last_only=False):
+    return transformer.lm_forward(params, batch, cfg, ctx, last_only)
+
+
+def _tf_decode(cfg, params, cache, tokens, pos, ctx=None):
+    return transformer.lm_decode_step(params, cache, tokens, pos, cfg, ctx)
+
+
+def _hy_forward(cfg, params, batch, ctx=None, last_only=False):
+    return hybrid.hybrid_forward(params, batch, cfg, ctx, last_only)
+
+
+def _hy_decode(cfg, params, cache, tokens, pos, ctx=None):
+    return hybrid.hybrid_decode_step(params, cache, tokens, pos, cfg, ctx)
+
+
+def _xl_forward(cfg, params, batch, ctx=None, last_only=False):
+    return xlstm.xlstm_forward(params, batch, cfg, ctx, last_only)
+
+
+def _xl_decode(cfg, params, cache, tokens, pos, ctx=None):
+    return xlstm.xlstm_decode_step(params, cache, tokens, pos, cfg, ctx)

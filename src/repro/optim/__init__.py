@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, clip_by_global_norm
+from repro.optim.schedule import cosine_warmup
+from repro.optim.grad_compression import (
+    compressed_pod_mean, quantize_int8, dequantize_int8)

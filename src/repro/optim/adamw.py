@@ -1,0 +1,84 @@
+"""Hand-rolled AdamW (optax is not installed in this environment).
+
+Decoupled weight decay, bias-corrected moments, optional global-norm
+clipping. State is a pytree matching params, so the launcher's sharding
+rules (including the ZeRO-style opt-state rules) apply transparently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Union[float, Callable[[jax.Array], jax.Array]] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def lr_at(self, step) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, metrics)."""
+        if self.grad_clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip_norm)
+        else:
+            _, gnorm = clip_by_global_norm(grads, jnp.inf)
+        step = state["step"] + 1
+        lr = self.lr_at(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            p32 = p.astype(jnp.float32)
+            if self.weight_decay > 0 and p.ndim >= 2:   # no decay on norms
+                delta = delta + self.weight_decay * p32
+            return (p32 - lr * delta).astype(p.dtype), m_new, v_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {
+            "m": tdef.unflatten([o[1] for o in out]),
+            "v": tdef.unflatten([o[2] for o in out]),
+            "step": step,
+        }
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

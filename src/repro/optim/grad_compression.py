@@ -1,0 +1,42 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+The paper's broadcast&gather pattern maps to the DDP gradient collective
+(DESIGN.md §2); across pods that collective crosses the slowest link
+("cross-facility" analogue), so we offer 1-byte compressed exchange with
+error feedback: each pod quantizes (grad + carried error) to int8 with a
+per-tensor scale, all-gathers (values, scales), reconstructs the true mean,
+and carries the quantization residual into the next step. Error feedback
+preserves convergence (tests/test_optim.py checks a quadratic descends to
+optimum through the compressor).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pod_mean(grad: jax.Array, error: jax.Array,
+                        axis_name: str = "pod"):
+    """Inside shard_map over ``axis_name``: returns (mean_grad, new_error).
+
+    Exchanges int8 values + one fp32 scale per pod instead of bf16/fp32
+    grads (≈2-4x less cross-pod traffic)."""
+    comp_in = grad.astype(jnp.float32) + error
+    q, s = quantize_int8(comp_in)
+    qs = jax.lax.all_gather(q, axis_name)            # (n_pod, ...)
+    ss = jax.lax.all_gather(s, axis_name)            # (n_pod,)
+    n = qs.shape[0]
+    mean = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0)) / n
+    new_error = comp_in - dequantize_int8(q, s)
+    return mean.astype(grad.dtype), new_error

@@ -1,0 +1,7 @@
+from repro.streaming.feedback import SteeringFeedback
+from repro.streaming.ingest import WORK_QUEUES, StreamingDataLoader
+from repro.streaming.producers import EdgeProducer
+from repro.streaming.rtbroker import RealtimeBroker
+
+__all__ = ["EdgeProducer", "RealtimeBroker", "SteeringFeedback",
+           "StreamingDataLoader", "WORK_QUEUES"]

@@ -1,0 +1,63 @@
+"""Fault-tolerance and elasticity helpers for the streaming data plane.
+
+The primitives live where they act — redelivery in the broker state
+machine (`core.broker.BrokerCluster.consumer_crash`), crash injection +
+elastic consumer groups on the loader (`streaming.ingest`), atomic/async
+checkpointing in `repro.checkpoint`. This module composes them into the
+operations a cluster controller would drive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.streaming.ingest import StreamingDataLoader
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    t: float
+    kind: str          # consumer-crash | consumer-respawn | resize
+    detail: str
+    redelivered: int = 0
+
+
+class ElasticConsumerGroup:
+    """Controller-view of the loader's consumer group: crash, respawn,
+    resize — every transition logged with its redelivery count (the
+    paper's 'rare events will not be lost' guarantee, §6)."""
+
+    def __init__(self, loader: StreamingDataLoader):
+        self.loader = loader
+        self.log: list[FailureEvent] = []
+
+    @property
+    def size(self) -> int:
+        return len(self.loader._consumer_ids)
+
+    def crash(self, consumer_id: str) -> int:
+        n = self.loader.crash_consumer(consumer_id)
+        self.log.append(FailureEvent(time.time(), "consumer-crash",
+                                     consumer_id, redelivered=n))
+        return n
+
+    def respawn(self) -> str:
+        cid = self.loader.add_consumer()
+        self.log.append(FailureEvent(time.time(), "consumer-respawn", cid))
+        return cid
+
+    def scale_to(self, n: int) -> None:
+        """Grow the group to n consumers (work-queue semantics rebalance
+        automatically; shrink happens by crashing stragglers — their
+        unacked messages redistribute)."""
+        while self.size < n:
+            self.respawn()
+        self.log.append(FailureEvent(time.time(), "resize", f"-> {n}"))
+
+    def kill_straggler(self, consumer_id: str) -> str:
+        """Straggler mitigation beyond the work-queue's natural balancing:
+        forcibly reassign a slow consumer's in-flight work and respawn."""
+        self.crash(consumer_id)
+        return self.respawn()

@@ -1,0 +1,107 @@
+"""Dry-run machinery units: HLO collective parsing, model-FLOPs math,
+analytic memory floor, shape assignments, sharding-rule fallbacks."""
+
+import jax
+import pytest
+
+import repro.launch.dryrun as dr
+from repro.configs import get_config
+from repro.configs.shapes import LONG_CAPABLE, SHAPES, shapes_for
+from repro.launch.mesh import make_local_mesh
+from repro.launch.shardings import make_rules, zero_rules
+
+HLO = """
+  %ag = bf16[16,512,128]{2,1,0} all-gather(bf16[1,512,128]{2,1,0} %p), dimensions={0}
+  %ar.1 = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %x), to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %y), dimensions={0}
+  %a2a = bf16[4,256]{1,0} all-to-all(bf16[4,256]{1,0} %z), dimensions={0}
+  %cp.2 = u32[8]{0} collective-permute(u32[8]{0} %w), source_target_pairs={{0,1}}
+  %ag.s = (bf16[2,8]{1,0}, bf16[16,8]{1,0}) all-gather-start(bf16[2,8]{1,0} %q)
+  %notacoll = f32[2,2]{1,0} add(f32[2,2]{1,0} %a, f32[2,2]{1,0} %b)
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    out = dr.parse_collectives(HLO)
+    assert out["all-gather"]["count"] == 2
+    assert out["all-gather"]["bytes"] == 16 * 512 * 128 * 2 + (2 * 8 + 16 * 8) * 2
+    assert out["all-reduce"]["bytes"] == 1024 * 1024 * 4
+    assert out["reduce-scatter"]["bytes"] == 64 * 4
+    assert out["all-to-all"]["bytes"] == 4 * 256 * 2
+    assert out["collective-permute"]["bytes"] == 8 * 4
+    assert sum(v["count"] for v in out.values()) == 6
+
+
+def test_collective_seconds_weights_allreduce_2x():
+    one_gb = {"all-reduce": {"count": 1, "bytes": int(50e9)},
+              "all-gather": {"count": 1, "bytes": int(50e9)}}
+    t = dr.collective_seconds({**{c: {"count": 0, "bytes": 0}
+                                  for c in dr._COLLECTIVES}, **one_gb})
+    assert t == pytest.approx(3.0)        # 2x + 1x at 50 GB/s
+
+
+def test_model_flops_scaling():
+    cfg = get_config("granite-8b")
+    f_train = dr.model_flops(cfg, "train", 256, 4096)
+    f_prefill = dr.model_flops(cfg, "prefill", 256, 4096)
+    assert f_train == pytest.approx(3 * f_prefill)
+    # MoE: active params not total
+    moe = get_config("qwen3-moe-30b-a3b")
+    assert dr.model_flops(moe, "train", 8, 128) == pytest.approx(
+        6.0 * moe.active_param_count() * 8 * 128)
+
+
+def test_analytic_memory_positive_and_ordered():
+    mesh = make_local_mesh(1, 1)
+    cfg = get_config("granite-8b")
+    t = dr.analytic_memory_bytes(cfg, "train", 256, 4096, mesh)
+    p = dr.analytic_memory_bytes(cfg, "prefill", 32, 32768, mesh)
+    d = dr.analytic_memory_bytes(cfg, "decode", 128, 32768, mesh)
+    assert t > p > 0 and d > 0
+
+
+def test_shapes_for_long_capability():
+    assert "long_500k" in [s.name for s in shapes_for("zamba2-7b")]
+    assert "long_500k" in [s.name for s in shapes_for("xlstm-1.3b")]
+    assert "long_500k" not in [s.name for s in shapes_for("granite-8b")]
+    assert LONG_CAPABLE == {"zamba2-7b", "xlstm-1.3b"}
+    # total baseline cells: 10 archs x 3 + 2 long = 32
+    assert sum(len(shapes_for(a)) for a in
+               ("musicgen-large", "granite-8b", "granite-34b", "gemma2-9b",
+                "granite-3-8b", "zamba2-7b", "moonshot-v1-16b-a3b",
+                "qwen3-moe-30b-a3b", "xlstm-1.3b", "pixtral-12b")) == 32
+
+
+def test_rules_divisibility_fallbacks():
+    mesh = make_local_mesh(2, 4)
+    # batch 1 cannot shard over data=2 -> replicated, kv_seq takes all axes
+    r = make_rules(get_config("zamba2-7b"), mesh, "decode", 1)
+    assert r["batch"] is None
+    assert r["kv_seq"] == ("data", "model")
+    # xlstm train: batch over (data, model)
+    r2 = make_rules(get_config("xlstm-1.3b"), mesh, "train", 8)
+    assert r2["batch"] == ("data", "model")
+    assert r2["vocab"] is None            # model axis consumed by batch
+    # gemma2: 16 heads over model=4 shards fine
+    r3 = make_rules(get_config("gemma2-9b"), mesh, "train", 8)
+    assert r3["heads"] == "model"
+
+
+def test_zero_rules_shards_d_model():
+    mesh = make_local_mesh(2, 2)
+    r = make_rules(get_config("granite-8b"), mesh, "train", 8)
+    assert r["d_model"] is None
+    assert zero_rules(r)["d_model"] == "data"
+
+
+def test_scan_unit_info_families():
+    g = get_config("gemma2-9b")
+    units, ov = dr._scan_unit_info(g)
+    assert units == 21 and ov(2)["n_layers"] == 4
+    z = get_config("zamba2-7b")
+    units, ov = dr._scan_unit_info(z)
+    assert units == 13
+    assert ov(2)["n_layers"] == 2 * 6 + 3
+    d = get_config("granite-34b")
+    units, _ = dr._scan_unit_info(d)
+    assert units == 88

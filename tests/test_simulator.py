@@ -1,0 +1,111 @@
+"""StreamSim behavior: determinism, paper-trend reproduction at reduced
+message counts, feasibility gates, conservation."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import rtt_cdf, summarize, throughput_msgs_per_s
+from repro.core.patterns import run_pattern
+from repro.core.simulator import (
+    ExperimentSpec, SimParams, StreamSim, run_experiment)
+from repro.core.workloads import DSTREAM, get_workload
+
+MSGS = 1500
+
+
+def _run(pattern, arch, wl, nc, seed=0, msgs=MSGS, **kw):
+    return run_pattern(pattern, arch, wl, nc, total_messages=msgs,
+                       n_runs=1, seed=seed, **kw)[0]
+
+
+def test_deterministic_given_seed():
+    r1 = _run("work_sharing", "dts", "dstream", 4, seed=3)
+    r2 = _run("work_sharing", "dts", "dstream", 4, seed=3)
+    assert np.array_equal(r1.consume_times, r2.consume_times)
+    r3 = _run("work_sharing", "dts", "dstream", 4, seed=4)
+    assert not np.array_equal(r1.consume_times, r3.consume_times)
+
+
+def test_all_messages_consumed():
+    r = _run("work_sharing", "mss", "dstream", 8)
+    assert r.n_consumed == (MSGS // 8) * 8
+
+
+def test_clock_monotone_nonnegative():
+    r = _run("feedback", "dts", "dstream", 2)
+    assert (np.diff(np.sort(r.consume_times)) >= 0).all()
+    assert (r.rtts > 0).all()
+    assert r.sim_time > 0
+
+
+def test_stunnel_infeasible_beyond_16():
+    r = _run("work_sharing", "prs-stunnel", "dstream", 32)
+    assert not r.feasible and "connection limit" in r.infeasible_reason
+    assert _run("work_sharing", "prs-stunnel", "dstream", 16).feasible
+
+
+def test_dts_outperforms_mss_at_scale():
+    """Paper Fig 4a: DTS >> MSS in work-sharing throughput at scale."""
+    t_dts = throughput_msgs_per_s(_run("work_sharing", "dts", "dstream", 16))
+    t_mss = throughput_msgs_per_s(_run("work_sharing", "mss", "dstream", 16))
+    assert t_dts > 1.8 * t_mss
+
+
+def test_stunnel_flat_scaling():
+    """Paper: Stunnel shows no improvement beyond one consumer."""
+    t1 = throughput_msgs_per_s(
+        _run("work_sharing", "prs-stunnel", "dstream", 1))
+    t8 = throughput_msgs_per_s(
+        _run("work_sharing", "prs-stunnel", "dstream", 8))
+    assert t8 < 1.25 * t1
+
+
+def test_prs_matches_dts_in_feedback():
+    """Paper §5.4: PRS performs as well as or better than DTS (vs MSS's
+    clear overhead) in the feedback pattern."""
+    m_dts = summarize(_run("feedback", "dts", "dstream", 4)).median_rtt_s
+    m_prs = summarize(
+        _run("feedback", "prs-haproxy", "dstream", 4)).median_rtt_s
+    m_mss = summarize(_run("feedback", "mss", "dstream", 4)).median_rtt_s
+    assert m_prs < 3.0 * m_dts
+    assert m_mss > m_dts
+
+
+def test_broadcast_copies_scale_with_consumers():
+    r2 = _run("broadcast", "dts", "generic", 2, msgs=120)
+    r8 = _run("broadcast", "dts", "generic", 8, msgs=120)
+    assert r8.n_consumed == 120 * 8
+    t2 = throughput_msgs_per_s(r2)
+    t8 = throughput_msgs_per_s(r8)
+    assert t8 > 2.5 * t2
+
+
+def test_broadcast_gather_rtt_knee_beyond_4():
+    """Paper Fig 7b: <5 s up to 4 consumers, sharp increase beyond."""
+    m4 = summarize(_run("broadcast_gather", "dts", "generic", 4,
+                        msgs=400)).median_rtt_s
+    m16 = summarize(_run("broadcast_gather", "dts", "generic", 16,
+                         msgs=400)).median_rtt_s
+    assert m4 < 5.0
+    assert m16 > 3.0 * m4
+
+
+def test_rtt_cdf_monotone():
+    r = _run("feedback", "mss", "dstream", 4)
+    x, q = rtt_cdf(r)
+    assert (np.diff(x) >= -1e-12).all() and q[-1] == 1.0
+
+
+def test_reject_publish_backpressure_counted():
+    """Tiny queue memory forces reject-publish; producers must retry and
+    all messages still arrive (guaranteed delivery, paper §6)."""
+    spec = ExperimentSpec(
+        pattern="work_sharing", workload=get_workload("dstream"),
+        arch="dts", n_producers=2, n_consumers=2, total_messages=400,
+        params=SimParams(seed=0, prefetch=2, consumer_proc_s=5e-3))
+    sim = StreamSim(spec)
+    for q in sim.broker.queues.values():
+        q.max_bytes = 64 * 1024          # ~4 messages deep
+    res = sim.run()
+    assert res.rejected_publishes > 0
+    assert res.n_consumed == 400
