@@ -1,0 +1,93 @@
+"""Engine scaling: heap vs vectorized StreamSim, pushed far beyond the
+paper's 64-consumer sweep (256 and 1024 consumers, up to 10^6 messages).
+
+Three cell families:
+
+* ``parity/*``     — both engines on the same 256-consumer work-sharing
+  run; 'derived' carries the throughput deviation and the wall-clock
+  speedup (the PR's >=10x acceptance gate).
+* ``vec1024/*``    — vectorized-only 1024-consumer sweeps at message
+  counts the heap engine cannot run interactively.
+* ``vec1M/*``      — a 10^6-message work-sharing run on the vectorized
+  engine (wall-clock seconds in 'derived').
+
+Inventory note: beyond 64 consumers the paper's 16+16 Andes client nodes
+host multiple producer/consumer processes per node — the shared client
+NICs then bottleneck exactly as the inventory model dictates.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Cache, sim_cell, thr_row
+from repro.core.ds2hpc import ClusterInventory
+from repro.core.metrics import throughput_msgs_per_s
+from repro.core.patterns import run_pattern
+
+PARITY_NC = 256
+PARITY_MSGS = 65_536
+BIG_NC = 1024
+BIG_MSGS = 262_144
+HUGE_MSGS = 1_048_576
+
+
+def _timed(engine: str, nc: int, msgs: int, arch: str = "dts",
+           pattern: str = "work_sharing", workload: str = "dstream"):
+    t0 = time.time()
+    r = run_pattern(pattern, arch, workload, nc, total_messages=msgs,
+                    n_runs=1, seed=0, engine=engine)[0]
+    return throughput_msgs_per_s(r), time.time() - t0
+
+
+def run(cache: Cache):
+    rows = []
+
+    def parity_cell() -> dict:
+        thr_h, wall_h = _timed("heap", PARITY_NC, PARITY_MSGS)
+        thr_v, wall_v = _timed("vectorized", PARITY_NC, PARITY_MSGS)
+        return {"thr_heap": thr_h, "thr_vec": thr_v,
+                "wall_heap": wall_h, "wall_vec": wall_v}
+
+    c = cache.get_or(
+        f"engine_scaling|parity|{PARITY_NC}|{PARITY_MSGS}", parity_cell)
+    dev = 100.0 * (c["thr_vec"] - c["thr_heap"]) / c["thr_heap"]
+    speedup = c["wall_heap"] / c["wall_vec"]
+    rows.append((f"engine/parity/ws/dts/c{PARITY_NC}",
+                 1e6 / c["thr_vec"],
+                 f"dev={dev:+.2f}% speedup={speedup:.1f}x "
+                 f"(heap {c['wall_heap']:.1f}s vec {c['wall_vec']:.1f}s)"))
+
+    for arch in ("dts", "prs-haproxy", "mss"):
+        cell = sim_cell(cache, "work_sharing", arch, "dstream", BIG_NC,
+                        BIG_MSGS, engine="vectorized")
+        rows.append(thr_row(f"engine/vec1024/ws/{arch}/c{BIG_NC}", cell))
+    cell = sim_cell(cache, "broadcast", "dts", "generic", BIG_NC, 512,
+                    engine="vectorized")
+    rows.append(thr_row(f"engine/vec1024/bcast/dts/c{BIG_NC}", cell))
+
+    def huge_cell() -> dict:
+        thr, wall = _timed("vectorized", PARITY_NC, HUGE_MSGS)
+        return {"thr": thr, "wall": wall}
+
+    c = cache.get_or(
+        f"engine_scaling|vec1M|{PARITY_NC}|{HUGE_MSGS}", huge_cell)
+    rows.append((f"engine/vec1M/ws/dts/c{PARITY_NC}", 1e6 / c["thr"],
+                 f"thr={c['thr']:.0f}msg/s wall={c['wall']:.1f}s "
+                 f"({HUGE_MSGS} msgs)"))
+
+    # the projected 100 Gbps fabric (paper §6), only reachable interactively
+    # with the vectorized engine
+    inv = ClusterInventory().highspeed()
+
+    def highspeed_cell() -> dict:
+        r = run_pattern("work_sharing", "dts", "dstream", BIG_NC,
+                        total_messages=BIG_MSGS, n_runs=1, seed=0,
+                        engine="vectorized", inventory=inv)[0]
+        return {"thr": throughput_msgs_per_s(r)}
+
+    c = cache.get_or(
+        f"engine_scaling|highspeed1024|{BIG_NC}|{BIG_MSGS}", highspeed_cell)
+    rows.append((f"engine/vec1024hs/ws/dts/c{BIG_NC}", 1e6 / c["thr"],
+                 f"thr={c['thr']:.0f}msg/s (100Gbps DSN projection)"))
+    return rows

@@ -42,13 +42,15 @@ class Cache:
 
 
 def sim_cell(cache: Cache, pattern: str, arch: str, workload: str,
-             nc: int, msgs: int, n_runs: int = 1, **params) -> dict:
+             nc: int, msgs: int, n_runs: int = 1, engine: str = "heap",
+             **params) -> dict:
     key = f"{pattern}|{arch}|{workload}|{nc}|{msgs}|{n_runs}|" + \
+        (f"engine={engine}|" if engine != "heap" else "") + \
         ",".join(f"{k}={v}" for k, v in sorted(params.items()))
 
     def compute() -> dict:
         rs = run_pattern(pattern, arch, workload, nc, total_messages=msgs,
-                         n_runs=n_runs, **params)
+                         n_runs=n_runs, engine=engine, **params)
         r = rs[0]
         if not r.feasible:
             return {"feasible": False, "reason": r.infeasible_reason}

@@ -8,8 +8,8 @@ import sys
 import time
 
 from benchmarks import (
-    bench_fig4_work_sharing, bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
-    bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
+    bench_engine_scaling, bench_fig4_work_sharing, bench_fig5_rtt_cdf,
+    bench_fig6_feedback_rtt, bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
     bench_highspeed_projection, bench_kernels, bench_payload_sweep,
     bench_roofline, bench_table1_workloads)
 from benchmarks.common import Cache
@@ -25,6 +25,7 @@ MODULES = [
     ("payload_sweep", bench_payload_sweep),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
+    ("engine_scaling", bench_engine_scaling),
 ]
 
 

@@ -3,7 +3,15 @@ architectures, printing a compact version of Figs 4/6/7 plus the headline
 overhead ratios (§6 conclusions).
 
     PYTHONPATH=src python examples/cross_facility_comparison.py
+    PYTHONPATH=src python examples/cross_facility_comparison.py --engine vectorized
+    PYTHONPATH=src python examples/cross_facility_comparison.py --engine vectorized --scale
+
+``--engine vectorized`` runs the batched array engine instead of the heap
+reference; ``--scale`` extends the sweep to 256 consumers (interactive
+only on the vectorized engine).
 """
+
+import argparse
 
 from repro.core import run_pattern, summarize
 from repro.core.metrics import overhead_table
@@ -12,28 +20,40 @@ ARCHS = ("dts", "prs-haproxy", "mss")
 
 
 def main() -> None:
-    print("== Fig4 (mini): work-sharing throughput, dstream ==")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("heap", "vectorized"),
+                    default="heap", help="StreamSim backend")
+    ap.add_argument("--scale", action="store_true",
+                    help="extend the work-sharing sweep to 256 consumers")
+    args = ap.parse_args()
+    eng = args.engine
+
+    ws_consumers = (1, 8, 32, 256) if args.scale else (1, 8, 32)
+    print(f"== Fig4 (mini): work-sharing throughput, dstream [{eng}] ==")
     ws = []
     for arch in ARCHS:
-        for nc in (1, 8, 32):
+        for nc in ws_consumers:
             s = summarize(run_pattern("work_sharing", arch, "dstream", nc,
-                                      total_messages=2048, n_runs=1)[0])
+                                      total_messages=max(2048, 16 * nc),
+                                      n_runs=1, engine=eng)[0])
             ws.append(s)
-            print(f"  {arch:13s} c={nc:2d}  {s.throughput_msgs_s:8.0f} msgs/s")
-    print("== Fig6 (mini): feedback median RTT, dstream ==")
+            print(f"  {arch:13s} c={nc:3d}  {s.throughput_msgs_s:8.0f} msgs/s")
+    print(f"== Fig6 (mini): feedback median RTT, dstream [{eng}] ==")
     for arch in ARCHS:
         for nc in (1, 8):
             s = summarize(run_pattern("feedback", arch, "dstream", nc,
-                                      total_messages=1536, n_runs=1)[0])
-            print(f"  {arch:13s} c={nc:2d}  {s.median_rtt_s * 1e3:8.0f} ms")
-    print("== Fig7a (mini): broadcast throughput, generic ==")
+                                      total_messages=1536, n_runs=1,
+                                      engine=eng)[0])
+            print(f"  {arch:13s} c={nc:3d}  {s.median_rtt_s * 1e3:8.0f} ms")
+    print(f"== Fig7a (mini): broadcast throughput, generic [{eng}] ==")
     for arch in ARCHS:
         s = summarize(run_pattern("broadcast", arch, "generic", 8,
-                                  total_messages=256, n_runs=1)[0])
-        print(f"  {arch:13s} c= 8  {s.throughput_msgs_s:8.0f} msgs/s")
+                                  total_messages=256, n_runs=1,
+                                  engine=eng)[0])
+        print(f"  {arch:13s} c=  8  {s.throughput_msgs_s:8.0f} msgs/s")
     print("== overhead vs DTS (work sharing) ==")
     for (arch, wl, nc), ov in sorted(overhead_table(ws).items()):
-        print(f"  {arch:13s} c={nc:2d}  {ov:.2f}x")
+        print(f"  {arch:13s} c={nc:3d}  {ov:.2f}x")
 
 
 if __name__ == "__main__":

@@ -15,18 +15,22 @@ from repro.core.patterns import CONSUMER_SWEEP, run_pattern, sweep
 from repro.core.s3m import ResourceSettings, S3MService
 from repro.core.scistream import S2CS, S2UC, establish_prs_session
 from repro.core.simulator import (
-    ExperimentSpec, RunResult, SimParams, StreamSim, run_experiment)
+    ENGINES, Engine, ExperimentSpec, RunResult, SimConfig, SimParams,
+    StreamSim, get_engine, run_experiment)
+from repro.core.vectorized import VectorizedStreamSim
 from repro.core.workloads import (
     DSTREAM, GENERIC, LSTREAM, WORKLOADS, Workload, get_workload)
 
 __all__ = [
     "ALL_ARCHITECTURES", "Architecture", "BrokerCluster", "CONSUMER_SWEEP",
     "Calibration", "ClassicQueue", "ClusterInventory", "DSTREAM",
-    "DirectStreaming", "ExperimentSpec", "GENERIC", "LSTREAM",
-    "ManagedServiceStreaming", "Message", "ProxiedStreaming",
+    "DirectStreaming", "ENGINES", "Engine", "ExperimentSpec", "GENERIC",
+    "LSTREAM", "ManagedServiceStreaming", "Message", "ProxiedStreaming",
     "RabbitMQRelease", "ResourceSettings", "RunResult", "S2CS", "S2UC",
-    "S3MService", "SimParams", "StreamSim", "WORKLOADS", "Workload",
-    "establish_prs_session", "get_workload", "make_architecture",
-    "overhead_table", "overhead_vs_baseline", "rtt_cdf", "run_experiment",
-    "run_pattern", "summarize", "sweep", "throughput_msgs_per_s",
+    "S3MService", "SimConfig", "SimParams", "StreamSim",
+    "VectorizedStreamSim", "WORKLOADS", "Workload",
+    "establish_prs_session", "get_engine", "get_workload",
+    "make_architecture", "overhead_table", "overhead_vs_baseline",
+    "rtt_cdf", "run_experiment", "run_pattern", "summarize", "sweep",
+    "throughput_msgs_per_s",
 ]

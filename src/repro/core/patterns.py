@@ -50,6 +50,7 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
                 total_messages: int = 8192,
                 n_runs: int = 3,
                 seed: int = 0,
+                engine: str = "heap",
                 inventory: Optional[ClusterInventory] = None,
                 cal: Optional[Calibration] = None,
                 **param_overrides) -> list[RunResult]:
@@ -57,9 +58,13 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
 
     The paper averages three runs per data point; we run ``n_runs`` seeds.
     Work-sharing patterns use equal producer/consumer counts; broadcast
-    patterns use a single producer (paper §5.2).
+    patterns use a single producer (paper §5.2).  ``engine`` selects the
+    simulator backend: ``"heap"`` (exact, one event per message-hop) or
+    ``"vectorized"`` (batched array engine — orders of magnitude faster at
+    high consumer counts; see :mod:`repro.core.vectorized`).
     """
     wl = get_workload(workload) if isinstance(workload, str) else workload
+    param_overrides.setdefault("engine", engine)
     n_producers = 1 if pattern.startswith("broadcast") else n_consumers
     if pattern == "broadcast_gather" and "reply_factor" not in param_overrides:
         param_overrides["reply_factor"] = GATHER_REPLY_FACTOR
@@ -83,6 +88,7 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
 def sweep(pattern: str, archs: Sequence[str], workload: str,
           consumers: Sequence[int] = CONSUMER_SWEEP, *,
           total_messages: int = 8192, n_runs: int = 3, seed: int = 0,
+          engine: str = "heap",
           inventory: Optional[ClusterInventory] = None,
           cal: Optional[Calibration] = None,
           **param_overrides) -> list[Summary]:
@@ -92,7 +98,8 @@ def sweep(pattern: str, archs: Sequence[str], workload: str,
         for nc in consumers:
             rs = run_pattern(pattern, arch, workload, nc,
                              total_messages=total_messages, n_runs=n_runs,
-                             seed=seed, inventory=inventory, cal=cal,
+                             seed=seed, engine=engine,
+                             inventory=inventory, cal=cal,
                              **param_overrides)
             out.append(average_summaries([summarize(r) for r in rs]))
     return out

@@ -16,6 +16,12 @@ busy intervals are tracked analytically — one heap event per hop, so a full
 Flow control matches the paper's RabbitMQ configuration (§5.2):
 publisher-confirm windows, consumer prefetch (basic.qos), batch
 acknowledgements, reject-publish overflow with producer re-publish.
+
+Two engines implement the same experiment contract (the :class:`Engine`
+protocol): this module's heap engine (one event per hop — the reference),
+and the batched array engine in :mod:`repro.core.vectorized` that computes
+whole message cohorts with prefix-scan FIFO math.  Select via
+``SimParams(engine="heap"|"vectorized")`` (alias :data:`SimConfig`).
 """
 
 from __future__ import annotations
@@ -23,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Optional
+from typing import Callable, Optional, Protocol
 
 import numpy as np
 
@@ -31,15 +37,19 @@ from repro.core.architectures import (
     Architecture, PathElement, ResourceSpec, make_architecture)
 from repro.core.broker import BrokerCluster, Delivery, Message
 from repro.core.ds2hpc import ClusterInventory
-from repro.core.workloads import Workload
+from repro.core.workloads import WORKLOADS, Workload
 
 # ---------------------------------------------------------------------------
 # Parameters
 # ---------------------------------------------------------------------------
 
-#: per-workload consumer processing time (seconds/message): parse+handle
-#: cost on the Andes clients (binary decode / HDF5 parse / 4 MiB handling).
-CONSUMER_PROC_S = {"dstream": 80e-6, "lstream": 1.2e-3, "generic": 3.0e-3}
+#: per-workload consumer processing time (seconds/message); kept as an
+#: alias of the Table-1 values, which now live on the Workload itself.
+CONSUMER_PROC_S = {name: w.proc_time_s() for name, w in WORKLOADS.items()}
+
+#: registered engine names -> constructor, filled at the bottom of this
+#: module (heap) and by repro.core.vectorized on import (vectorized).
+ENGINES: dict = {}
 
 
 @dataclasses.dataclass
@@ -56,6 +66,22 @@ class SimParams:
     max_events: int = 30_000_000
     max_sim_time: float = 36_000.0
     consumer_proc_s: Optional[float] = None   # override per-workload default
+    engine: str = "heap"            # "heap" (reference) | "vectorized"
+    #: vectorized engine: per-producer messages per cohort round; smaller
+    #: rounds interleave cross-flow traffic more finely (closer to the
+    #: heap engine's event order) at the cost of more python-level rounds
+    vec_round: int = 8
+    #: vectorized engine: how far (seconds) past the next event's key a
+    #: cohort may be served in one batch; 0 enforces strict global time
+    #: ordering at every shared resource, larger values trade fidelity
+    #: for fewer, bigger array operations.  None auto-scales with client
+    #: count (aggregate metrics become insensitive to ordering slack as
+    #: the number of concurrent flows grows).
+    vec_horizon_s: Optional[float] = None
+
+
+#: the user-facing name for selecting an engine: SimConfig(engine=...)
+SimConfig = SimParams
 
 
 @dataclasses.dataclass
@@ -91,6 +117,28 @@ class RunResult:
 
 class InfeasibleConfiguration(RuntimeError):
     pass
+
+
+class Engine(Protocol):
+    """What an engine must provide: construct from (spec, inventory, arch)
+    — raising :class:`InfeasibleConfiguration` for configs the deployment
+    cannot host — then produce a :class:`RunResult` from :meth:`run`."""
+
+    def __init__(self, spec: ExperimentSpec,
+                 inventory: Optional[ClusterInventory] = None,
+                 arch: Optional[Architecture] = None): ...
+
+    def run(self) -> RunResult: ...
+
+
+def check_feasibility(arch: Architecture, spec: ExperimentSpec) -> None:
+    """Deployment gates shared by every engine (e.g. Stunnel's hard
+    16-connection cap, the paper's missing PRS data points)."""
+    limit = arch.producer_conn_limit()
+    if limit is not None and spec.n_producers > limit:
+        raise InfeasibleConfiguration(
+            f"{arch.name}: {spec.n_producers} producer "
+            f"connections exceed tunnel connection limit {limit}")
 
 
 # ---------------------------------------------------------------------------
@@ -166,11 +214,7 @@ class StreamSim:
         self._expected_consumed = 0
         self._proc_s = (self.p.consumer_proc_s
                         if self.p.consumer_proc_s is not None
-                        else CONSUMER_PROC_S.get(
-                            spec.workload.name,
-                            # custom workloads: scale handling cost with
-                            # payload size (~dstream's per-byte rate)
-                            80e-6 * spec.workload.payload_bytes / 16384))
+                        else spec.workload.proc_time_s())
         self._check_feasibility()
         self._setup_pattern()
 
@@ -204,11 +248,7 @@ class StreamSim:
 
     # -- feasibility (e.g. Stunnel's 16-connection cap) ----------------------------
     def _check_feasibility(self) -> None:
-        limit = self.arch.producer_conn_limit()
-        if limit is not None and self.spec.n_producers > limit:
-            raise InfeasibleConfiguration(
-                f"{self.arch.name}: {self.spec.n_producers} producer "
-                f"connections exceed tunnel connection limit {limit}")
+        check_feasibility(self.arch, self.spec)
 
     # -- topology per pattern --------------------------------------------------------
     def _setup_pattern(self) -> None:
@@ -483,13 +523,29 @@ class StreamSim:
             sim_time=self.now, n_events=self.n_events)
 
 
+ENGINES["heap"] = StreamSim
+
+
+def get_engine(name: str):
+    """Resolve an engine name to its class, importing lazily."""
+    if name not in ENGINES and name == "vectorized":
+        import repro.core.vectorized  # noqa: F401  (registers itself)
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; options: {sorted(ENGINES)}") from None
+
+
 def run_experiment(spec: ExperimentSpec,
                    inventory: Optional[ClusterInventory] = None,
                    arch: Optional[Architecture] = None) -> RunResult:
-    """Run one experiment; infeasible configs return a RunResult with
-    feasible=False (matching the paper's missing Stunnel data points)."""
+    """Run one experiment on the engine named by ``spec.params.engine``;
+    infeasible configs return a RunResult with feasible=False (matching the
+    paper's missing Stunnel data points)."""
+    engine_cls = get_engine(spec.params.engine)
     try:
-        sim = StreamSim(spec, inventory, arch)
+        sim = engine_cls(spec, inventory, arch)
     except InfeasibleConfiguration as e:
         return RunResult(spec=spec, feasible=False, infeasible_reason=str(e))
     return sim.run()

@@ -53,10 +53,20 @@ class Workload:
     data_rate_gbps: float        # nominal source data rate (detector-side)
     consumption_parallelism: Parallelism
     production_parallelism: Parallelism
+    #: consumer-side parse+handle cost (seconds/message) on the Andes
+    #: clients; None derives it from payload size at Dstream's per-byte rate
+    consumer_proc_s: "float | None" = None
 
     @property
     def message_bits(self) -> int:
         return self.payload_bytes * 8
+
+    def proc_time_s(self) -> float:
+        """Per-message consumer processing time, used by both StreamSim
+        engines (binary decode / HDF5 parse / 4 MiB handling)."""
+        if self.consumer_proc_s is not None:
+            return self.consumer_proc_s
+        return 80e-6 * self.payload_bytes / 16384
 
     def messages_per_second_at_rate(self, gbps: float | None = None) -> float:
         """Message rate needed to sustain ``gbps`` (defaults to nominal)."""
@@ -97,6 +107,7 @@ DSTREAM = Workload(
     data_rate_gbps=32.0,
     consumption_parallelism=Parallelism.NON_MPI,
     production_parallelism=Parallelism.NON_MPI,
+    consumer_proc_s=80e-6,
 )
 
 LSTREAM = Workload(
@@ -109,6 +120,7 @@ LSTREAM = Workload(
     data_rate_gbps=30.0,
     consumption_parallelism=Parallelism.MPI,
     production_parallelism=Parallelism.MPI,
+    consumer_proc_s=1.2e-3,
 )
 
 GENERIC = Workload(
@@ -121,6 +133,7 @@ GENERIC = Workload(
     data_rate_gbps=25.0,
     consumption_parallelism=Parallelism.MPI,
     production_parallelism=Parallelism.MPI,
+    consumer_proc_s=3.0e-3,
 )
 
 WORKLOADS: dict[str, Workload] = {

@@ -240,7 +240,8 @@ def mlstm_seq_parallel(q, k, v, i_gate, f_gate, *, mesh, batch_axes,
                                init_state=(inC, inN))
         return out
 
-    return jax.shard_map(
+    from repro.compat import shard_map
+    return shard_map(
         body, mesh=mesh,
         in_specs=(io_spec, io_spec, io_spec, g_spec, g_spec),
         out_specs=io_spec, check_vma=False)(q, k, v, i_gate, f_gate)

@@ -1,0 +1,88 @@
+"""``hypothesis`` when installed, a tiny deterministic fallback otherwise.
+
+CI installs the real library via the ``dev`` extra (``pip install -e
+.[dev]``) and gets full shrinking/edge-case generation.  Bare environments
+(e.g. an air-gapped container with only the runtime deps) still *collect and
+run* every property test: the fallback re-implements just the strategy
+surface this suite uses — ``integers``, ``lists``, ``sampled_from`` — and
+runs each property ``max_examples`` times with a seeded RNG, so failures
+are reproducible even without hypothesis.
+
+Usage (instead of ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            opts = list(options)
+            return _Strategy(lambda rng: rng.choice(opts))
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        """Record ``max_examples``; other hypothesis knobs are no-ops."""
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                # read from the wrapper: @settings is usually stacked
+                # *above* @given and annotates the wrapped function
+                n = getattr(wrapper, "_compat_max_examples", 20)
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # not functools.wraps: copying __wrapped__ would re-expose the
+            # strategy parameters and pytest would treat them as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", 20)
+            return wrapper
+        return deco

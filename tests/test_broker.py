@@ -2,7 +2,7 @@
 on (§4.2/§5.2)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.broker import BrokerCluster, Message, OverflowPolicy
 

@@ -185,15 +185,15 @@ def test_mini_multipod_dryrun_compiles():
     proves the pod axis shards end-to-end inside CI."""
     run_sub("""
         import dataclasses
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh
         from repro.configs import get_smoke_config
         from repro.launch.shardings import assemble, opt_state_shardings
         from repro.launch.steps import build_train_step
         from repro.models.zoo import build_model
         from repro.optim import AdamW
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
         cfg = dataclasses.replace(get_smoke_config("granite-8b"),
                                   microbatches=2)
         model = build_model(cfg)

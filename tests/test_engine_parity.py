@@ -1,0 +1,118 @@
+"""Heap-engine vs vectorized-engine parity on the paper's Fig 4/6/7
+metrics: throughput (work sharing), median RTT (feedback), broadcast
+throughput + gather RTT — all three architectures at 8 consumers.
+
+Most cells agree within ~1%; two documented residuals (DTS work-sharing
+throughput, DTS/PRS gather-leg RTTs) sit within a few percent — see the
+Fidelity note in repro/core/vectorized.py.  Bounds here carry margin over
+the measured deviations so the suite stays robust across platforms.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import overhead_vs_baseline, summarize
+from repro.core.patterns import run_pattern
+from repro.core.simulator import ENGINES, SimConfig, SimParams, get_engine
+
+ARCHS = ("dts", "prs-haproxy", "mss")
+NC = 8
+
+#: per-cell relative tolerance; the two DTS/PRS outliers are second-order
+#: FIFO-interleaving residuals documented in repro.core.vectorized
+THR_TOL = {"dts": 0.07, "prs-haproxy": 0.02, "mss": 0.02}
+RTT_TOL = {"dts": 0.06, "prs-haproxy": 0.02, "mss": 0.02}
+GATHER_RTT_TOL = {"dts": 0.02, "prs-haproxy": 0.07, "mss": 0.02}
+
+
+def _cell(pattern, arch, wl, msgs, engine, **kw):
+    r = run_pattern(pattern, arch, wl, NC, total_messages=msgs, n_runs=1,
+                    seed=0, jitter=0.0, engine=engine, **kw)[0]
+    assert r.feasible
+    return summarize(r)
+
+
+def _rel(a, b):
+    return abs(b - a) / a
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_work_sharing_throughput_parity(arch):
+    """Fig 4: aggregate work-sharing throughput."""
+    h = _cell("work_sharing", arch, "dstream", 4096, "heap")
+    v = _cell("work_sharing", arch, "dstream", 4096, "vectorized")
+    assert v.n_messages == h.n_messages == 4096
+    assert _rel(h.throughput_msgs_s, v.throughput_msgs_s) < THR_TOL[arch]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_feedback_rtt_parity(arch):
+    """Fig 6: feedback median RTT (and throughput rides along)."""
+    h = _cell("feedback", arch, "dstream", 4096, "heap")
+    v = _cell("feedback", arch, "dstream", 4096, "vectorized")
+    assert _rel(h.median_rtt_s, v.median_rtt_s) < RTT_TOL[arch]
+    assert _rel(h.throughput_msgs_s, v.throughput_msgs_s) < 0.02
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_broadcast_gather_parity(arch):
+    """Fig 7: broadcast throughput + gather RTT."""
+    h = _cell("broadcast_gather", arch, "generic", 400, "heap")
+    v = _cell("broadcast_gather", arch, "generic", 400, "vectorized")
+    assert v.n_messages == h.n_messages == 400 * NC
+    assert _rel(h.throughput_msgs_s, v.throughput_msgs_s) < 0.02
+    assert _rel(h.median_rtt_s, v.median_rtt_s) < GATHER_RTT_TOL[arch]
+
+
+def test_overhead_ratios_preserved():
+    """The paper's §5.2 overhead-vs-DTS ratios survive the engine swap."""
+    thr = {}
+    for eng in ("heap", "vectorized"):
+        for arch in ARCHS:
+            thr[eng, arch] = _cell(
+                "work_sharing", arch, "dstream", 4096, eng).throughput_msgs_s
+    for eng in ("heap", "vectorized"):
+        ov_mss = overhead_vs_baseline(thr[eng, "mss"], thr[eng, "dts"],
+                                      higher_is_better=True)
+        ov_prs = overhead_vs_baseline(thr[eng, "prs-haproxy"],
+                                      thr[eng, "dts"], higher_is_better=True)
+        # paper: MSS pays a clear work-sharing throughput overhead; PRS
+        # sits between DTS and MSS
+        assert ov_mss > ov_prs > 1.0
+
+
+def test_vectorized_deterministic_and_seed_sensitive():
+    kw = dict(total_messages=2048, n_runs=1, engine="vectorized")
+    r1 = run_pattern("work_sharing", "dts", "dstream", NC, seed=3, **kw)[0]
+    r2 = run_pattern("work_sharing", "dts", "dstream", NC, seed=3, **kw)[0]
+    r3 = run_pattern("work_sharing", "dts", "dstream", NC, seed=4, **kw)[0]
+    assert np.array_equal(r1.consume_times, r2.consume_times)
+    assert not np.array_equal(r1.consume_times, r3.consume_times)
+
+
+def test_vectorized_respects_feasibility_gates():
+    r = run_pattern("work_sharing", "prs-stunnel", "dstream", 32,
+                    total_messages=512, n_runs=1, engine="vectorized")[0]
+    assert not r.feasible and "connection limit" in r.infeasible_reason
+
+
+def test_engine_registry_and_config_alias():
+    assert SimConfig is SimParams
+    assert SimConfig().engine == "heap"
+    assert get_engine("heap") is ENGINES["heap"]
+    assert get_engine("vectorized") is ENGINES["vectorized"]
+    with pytest.raises(ValueError):
+        get_engine("quantum")
+
+
+def test_vectorized_conserves_messages_across_patterns():
+    for pattern, wl, msgs, expect in (
+            ("work_sharing", "dstream", 1024, 1024),
+            ("feedback", "dstream", 1024, 1024),
+            ("broadcast", "generic", 64, 64 * NC),
+            ("broadcast_gather", "generic", 64, 64 * NC)):
+        r = run_pattern(pattern, "dts", wl, NC, total_messages=msgs,
+                        n_runs=1, engine="vectorized")[0]
+        assert r.n_consumed == expect, pattern
+        if pattern in ("feedback", "broadcast_gather"):
+            assert r.rtts.size == expect and (r.rtts > 0).all()

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import layers as L
@@ -224,8 +224,8 @@ def test_moe_capacity_dropping_grace():
     """With capacity_factor << 1 the EP-style capacity math drops tokens;
     dropped tokens must pass through as zeros in the routed output (the
     residual carries them), never NaN."""
+    from repro.compat import AxisType, make_mesh, shard_map
     from repro.models.moe import _ep_local
-    import jax as _jax
 
     D, E, T = 16, 4, 32
     k1, k2, k3 = jax.random.split(KEY, 3)
@@ -233,10 +233,9 @@ def test_moe_capacity_dropping_grace():
     router = jax.random.normal(k2, (D, E))
     wi = 0.1 * jax.random.normal(k3, (E, D, 64))
     wo = 0.1 * jax.random.normal(k3, (E, 32, D))
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",), axis_types=(AxisType.Auto,))
     P = jax.sharding.PartitionSpec
-    fn = _jax.shard_map(
+    fn = shard_map(
         lambda x: _ep_local(x, router, wi, wo, k=2, n_experts=E,
                             capacity_factor=0.25, model_axis="model",
                             n_model=1, tokens_replicated=True),

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.optim import (
     AdamW, clip_by_global_norm, compressed_pod_mean, cosine_warmup,
     dequantize_int8, quantize_int8)
@@ -84,11 +85,10 @@ def test_quantize_roundtrip_error_bounded():
 def test_compressed_pod_mean_and_error_feedback():
     """shard_map over a 1-sized pod axis: mean == identity, and the carried
     error equals the quantization residual."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
     x = jax.random.normal(jax.random.key(1), (64,))
     e0 = jnp.zeros_like(x)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda g, e: compressed_pod_mean(g, e, "pod"),
         mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
         out_specs=(jax.sharding.PartitionSpec(),) * 2, check_vma=False)
@@ -100,10 +100,9 @@ def test_compressed_pod_mean_and_error_feedback():
 def test_error_feedback_sgd_converges():
     """Quadratic descent *through the compressor* still converges (the
     error-feedback guarantee)."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
     P = jax.sharding.PartitionSpec
-    comp = jax.jit(jax.shard_map(
+    comp = jax.jit(shard_map(
         lambda g, e: compressed_pod_mean(g, e, "pod"), mesh=mesh,
         in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False))
     x = jnp.array([4.0, -7.0, 2.0])
