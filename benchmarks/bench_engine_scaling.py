@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Cache, sim_cell, thr_row
+from benchmarks.common import Cache, cache_key, sim_cell, thr_row
 from repro.core.ds2hpc import ClusterInventory
 from repro.core.metrics import throughput_msgs_per_s
 from repro.core.patterns import run_pattern
@@ -50,7 +50,8 @@ def run(cache: Cache):
                 "wall_heap": wall_h, "wall_vec": wall_v}
 
     c = cache.get_or(
-        f"engine_scaling|parity|{PARITY_NC}|{PARITY_MSGS}", parity_cell)
+        cache_key(f"engine_scaling|parity|{PARITY_NC}|{PARITY_MSGS}",
+                  engine="vectorized"), parity_cell)
     dev = 100.0 * (c["thr_vec"] - c["thr_heap"]) / c["thr_heap"]
     speedup = c["wall_heap"] / c["wall_vec"]
     rows.append((f"engine/parity/ws/dts/c{PARITY_NC}",
@@ -71,7 +72,8 @@ def run(cache: Cache):
         return {"thr": thr, "wall": wall}
 
     c = cache.get_or(
-        f"engine_scaling|vec1M|{PARITY_NC}|{HUGE_MSGS}", huge_cell)
+        cache_key(f"engine_scaling|vec1M|{PARITY_NC}|{HUGE_MSGS}",
+                  engine="vectorized"), huge_cell)
     rows.append((f"engine/vec1M/ws/dts/c{PARITY_NC}", 1e6 / c["thr"],
                  f"thr={c['thr']:.0f}msg/s wall={c['wall']:.1f}s "
                  f"({HUGE_MSGS} msgs)"))
@@ -87,7 +89,8 @@ def run(cache: Cache):
         return {"thr": throughput_msgs_per_s(r)}
 
     c = cache.get_or(
-        f"engine_scaling|highspeed1024|{BIG_NC}|{BIG_MSGS}", highspeed_cell)
+        cache_key(f"engine_scaling|highspeed1024|{BIG_NC}|{BIG_MSGS}",
+                  engine="vectorized"), highspeed_cell)
     rows.append((f"engine/vec1024hs/ws/dts/c{BIG_NC}", 1e6 / c["thr"],
                  f"thr={c['thr']:.0f}msg/s (100Gbps DSN projection)"))
     return rows

@@ -2,6 +2,7 @@
 become usable (and clients get 10 Gbps) — quantifies how far the 1 Gbps
 links constrain every architecture today."""
 
+from benchmarks.common import cache_key, resolve_engine
 from repro.core.ds2hpc import ClusterInventory
 from repro.core.metrics import summarize
 from repro.core.patterns import run_pattern
@@ -12,10 +13,10 @@ def run(cache):
         def compute():
             r = run_pattern("work_sharing", arch, "dstream", 16,
                             total_messages=4096, n_runs=1,
-                            inventory=inv)[0]
+                            engine=resolve_engine(), inventory=inv)[0]
             s = summarize(r)
             return {"feasible": r.feasible, "throughput": s.throughput_msgs_s}
-        return cache.get_or(key, compute)
+        return cache.get_or(cache_key(key), compute)
 
     rows = []
     base = ClusterInventory()

@@ -7,6 +7,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks.common import plain_key
+
 from repro.kernels import ops, ref
 
 
@@ -53,4 +55,4 @@ def run(cache):
         rows.append(["kernels/ssd_state_scan/interp", us_k,
                      "fused inter-chunk recurrence"])
         return rows
-    return [tuple(r) for r in cache.get_or("kernels/micro", compute)]
+    return [tuple(r) for r in cache.get_or(plain_key("kernels/micro"), compute)]

@@ -1,0 +1,107 @@
+"""Overflow-regime stress sweep: reject-publish + credit-flow blocking.
+
+The paper's configurations never trigger RabbitMQ's overflow machinery
+(queue backlogs stay far below both the byte caps and the credit-flow
+threshold).  This bench pushes StreamSim into that regime — small confirm
+window, slow consumers, tight per-queue byte caps — and sweeps it to
+consumer counts only the vectorized engine can run interactively.
+
+Cell families:
+
+* ``overflow/parity/*`` — the heap and vectorized engines on the same
+  both-mechanisms cell (cap ~6% above the credit threshold, 4
+  producers/consumers, jitter off); 'derived' carries the throughput
+  deviation and the rejected/blocked counters side by side.
+* ``overflow/scale/*``  — vectorized-only reject-publish sweeps at 64,
+  256 and 1024 consumers with a fixed small queue cap and a fixed
+  aggregate drain rate (consumer processing time scales with the fleet,
+  so producers outpace the drain at every size and the queue pins at its
+  cap — the pure overflow/retry path at affordable message volumes).
+
+Set ``OVERFLOW_BENCH_SMOKE=1`` to run only the parity cell and the
+64-consumer scale cell (the CI smoke configuration).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Cache, cache_key
+from repro.core.broker import ClassicQueue
+from repro.core.metrics import summarize
+from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS, overflow_stress
+from repro.core.workloads import DSTREAM
+
+PARITY_NC = 4
+SCALE_NCS = (64, 256, 1024)
+SCALE_CAP_MSGS = 2048
+SCALE_MSGS = 32768
+SCALE_MSGS_SMOKE = 8192       # CI smoke: one short reject-retry episode
+#: per-consumer processing seconds per fleet member: fixes the aggregate
+#: drain at 1/SCALE_PROC_PER_NC ~ 4000 msg/s regardless of consumer count
+SCALE_PROC_PER_NC = 250e-6
+
+
+def _summ(r) -> dict:
+    s = summarize(r)
+    return {"feasible": r.feasible,
+            "throughput": s.throughput_msgs_s,
+            "median_rtt": s.median_rtt_s,
+            "rejected": int(r.rejected_publishes),
+            "blocked": int(r.blocked_confirms)}
+
+
+def run(cache: Cache):
+    smoke = bool(os.environ.get("OVERFLOW_BENCH_SMOKE"))
+    rows = []
+
+    parity_cap = int(ClassicQueue.FLOW_CREDIT * PARITY_NC * 1.06)
+    parity_params = dict(OVERFLOW_STRESS_DEFAULTS, jitter=0.0,
+                         queue_max_bytes=parity_cap * DSTREAM.payload_bytes)
+
+    def parity_cell() -> dict:
+        out = {}
+        for eng in ("heap", "vectorized"):
+            t0 = time.time()
+            r = overflow_stress("dts", PARITY_NC, engine=eng,
+                                **parity_params)[0]
+            out[eng] = _summ(r)
+            out[eng]["wall"] = time.time() - t0
+        return out
+
+    c = cache.get_or(
+        cache_key(f"overflow|parity|dts|{PARITY_NC}", engine="vectorized",
+                  **parity_params), parity_cell)
+    h, v = c["heap"], c["vectorized"]
+    dev = 100.0 * (v["throughput"] - h["throughput"]) / h["throughput"]
+    rows.append((f"overflow/parity/dts/c{PARITY_NC}",
+                 1e6 / v["throughput"],
+                 f"dev={dev:+.2f}% rej={h['rejected']}/{v['rejected']} "
+                 f"blk={h['blocked']}/{v['blocked']} (heap/vec)"))
+
+    msgs = SCALE_MSGS_SMOKE if smoke else SCALE_MSGS
+    for nc in SCALE_NCS:
+        if smoke and nc != SCALE_NCS[0]:
+            continue
+        scale_params = dict(
+            OVERFLOW_STRESS_DEFAULTS,
+            consumer_proc_s=SCALE_PROC_PER_NC * nc,
+            queue_max_bytes=SCALE_CAP_MSGS * DSTREAM.payload_bytes)
+
+        def scale_cell(nc=nc, scale_params=scale_params) -> dict:
+            r = overflow_stress(
+                "dts", nc, queue_cap_msgs=SCALE_CAP_MSGS,
+                total_messages=msgs, engine="vectorized",
+                **scale_params)[0]
+            return _summ(r)
+
+        c = cache.get_or(
+            cache_key(f"overflow|scale|dts|{nc}|{SCALE_CAP_MSGS}"
+                      f"|{msgs}", engine="vectorized",
+                      **scale_params), scale_cell)
+        rows.append((f"overflow/scale/dts/c{nc}",
+                     1e6 / c["throughput"],
+                     f"thr={c['throughput']:.0f}msg/s "
+                     f"rej={c['rejected']} blk={c['blocked']}"))
+    return rows

@@ -5,6 +5,7 @@ mattering and MSS's ingress byte-cap takes over)."""
 
 import dataclasses
 
+from benchmarks.common import cache_key, resolve_engine
 from repro.core.metrics import summarize
 from repro.core.patterns import run_pattern
 from repro.core.workloads import DSTREAM
@@ -22,12 +23,13 @@ def run(cache):
                 wl = dataclasses.replace(
                     DSTREAM, name=f"sweep{kib}", payload_bytes=kib * 1024)
                 r = run_pattern("work_sharing", arch, wl, 8,
-                                total_messages=2048, n_runs=1)[0]
+                                total_messages=2048, n_runs=1,
+                                engine=resolve_engine())[0]
                 s = summarize(r)
                 return {"throughput": s.throughput_msgs_s,
                         "gbps": s.goodput_gbps}
 
-            cell = cache.get_or(key, compute)
+            cell = cache.get_or(cache_key(key), compute)
             rows.append((key, 1e6 / max(cell["throughput"], 1e-9),
                          f"thr={cell['throughput']:.0f}msg/s "
                          f"goodput={cell['gbps']:.2f}Gbps"))

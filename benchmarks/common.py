@@ -6,30 +6,107 @@ Row contract (benchmarks/run.py prints ``name,us_per_call,derived``):
                 throughput cells, or median RTT in us for latency cells
   derived     - paper reference value + deviation, or the measured
                 secondary quantity
+
+Cache keys are versioned and carry the *engine name* plus a fingerprint
+of the fully-resolved :class:`SimParams` (defaults + overrides), so an
+engine switch or a simulator-default change can never silently serve
+stale numbers.  Legacy-format keys (pre-``v2|``) make the cache fail
+loudly — see :class:`Cache`.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.core.metrics import rtt_fraction_under, summarize
 from repro.core.patterns import run_pattern
+from repro.core.simulator import SimParams
 
 CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                           "bench_cache.json")
 
+#: every cache key must start with this; anything else is a legacy key
+#: from before engine/params-aware keying and must not be served
+CACHE_KEY_VERSION = "v2"
+
+#: process-wide engine override (benchmarks/run.py --engine); None means
+#: "whatever SimParams defaults to"
+DEFAULT_ENGINE: Optional[str] = None
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """Effective engine for a benchmark cell: explicit argument, then the
+    --engine override, then the SimParams default."""
+    if engine is not None:
+        return engine
+    if DEFAULT_ENGINE is not None:
+        return DEFAULT_ENGINE
+    return SimParams().engine
+
+
+def params_fingerprint(engine: str, **params) -> str:
+    """Short stable hash of the fully-resolved SimParams for a cell.
+
+    Built from the constructed dataclass (defaults + overrides), so any
+    change to simulator defaults — not just the overrides a bench passes
+    — invalidates the cache entry."""
+    p = SimParams(engine=engine, **params)
+    blob = repr(sorted(p.__dict__.items()))
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def cache_key(name: str, engine: Optional[str] = None, **params) -> str:
+    """Versioned cache key: ``v2|engine=<engine>|p=<fingerprint>|<name>``.
+
+    Use for every cell whose value depends on a simulator run; cells with
+    no simulator dependence may use :func:`plain_key`."""
+    eng = resolve_engine(engine)
+    return (f"{CACHE_KEY_VERSION}|engine={eng}|"
+            f"p={params_fingerprint(eng, **params)}|{name}")
+
+
+def plain_key(name: str) -> str:
+    """Versioned key for cells with no simulator dependence (kernels)."""
+    return f"{CACHE_KEY_VERSION}|{name}"
+
+
+class LegacyCacheError(RuntimeError):
+    pass
+
 
 class Cache:
+    """Disk-backed benchmark cache.
+
+    Refuses to operate on a cache file containing legacy-format keys
+    (anything not ``v2|``-prefixed): those entries predate engine- and
+    params-aware keying, so serving them after an engine change would
+    silently report stale heap-engine numbers.  Delete the file (or the
+    offending entries) to proceed — the bench runner re-measures."""
+
     def __init__(self, path: str = CACHE_PATH):
         self.path = os.path.abspath(path)
         self.data: dict = {}
         if os.path.exists(self.path):
             with open(self.path) as f:
                 self.data = json.load(f)
+            legacy = [k for k in self.data
+                      if not k.startswith(f"{CACHE_KEY_VERSION}|")]
+            if legacy:
+                raise LegacyCacheError(
+                    f"{self.path} contains {len(legacy)} legacy-format "
+                    f"cache key(s) (e.g. {legacy[0]!r}) from before "
+                    f"engine/params-aware keying; serving them could "
+                    f"return stale numbers for the wrong engine. Delete "
+                    f"the file and re-run to re-measure.")
 
     def get_or(self, key: str, fn: Callable[[], dict]) -> dict:
+        if not key.startswith(f"{CACHE_KEY_VERSION}|"):
+            raise LegacyCacheError(
+                f"cache key {key!r} lacks the {CACHE_KEY_VERSION}| "
+                f"version prefix; build it with cache_key()/plain_key()")
         if key not in self.data:
             self.data[key] = fn()
             self.save()
@@ -42,15 +119,15 @@ class Cache:
 
 
 def sim_cell(cache: Cache, pattern: str, arch: str, workload: str,
-             nc: int, msgs: int, n_runs: int = 1, engine: str = "heap",
-             **params) -> dict:
-    key = f"{pattern}|{arch}|{workload}|{nc}|{msgs}|{n_runs}|" + \
-        (f"engine={engine}|" if engine != "heap" else "") + \
-        ",".join(f"{k}={v}" for k, v in sorted(params.items()))
+             nc: int, msgs: int, n_runs: int = 1,
+             engine: Optional[str] = None, **params) -> dict:
+    eng = resolve_engine(engine)
+    key = cache_key(f"{pattern}|{arch}|{workload}|{nc}|{msgs}|{n_runs}",
+                    engine=eng, **params)
 
     def compute() -> dict:
         rs = run_pattern(pattern, arch, workload, nc, total_messages=msgs,
-                         n_runs=n_runs, engine=engine, **params)
+                         n_runs=n_runs, engine=eng, **params)
         r = rs[0]
         if not r.feasible:
             return {"feasible": False, "reason": r.infeasible_reason}
@@ -69,6 +146,7 @@ def sim_cell(cache: Cache, pattern: str, arch: str, workload: str,
                 for t in (0.7, 5.0, 12.5)} if r.rtts.size else None,
             "goodput_gbps": s.goodput_gbps,
             "rejected": s.rejected,
+            "blocked": s.blocked,
         }
 
     return cache.get_or(key, compute)

@@ -1,18 +1,26 @@
 """Benchmark harness: one module per paper table/figure + the roofline and
 kernel micro-benches. Prints ``name,us_per_call,derived`` CSV.
 
-Simulator cells are disk-cached (results/bench_cache.json); delete the
-cache to force re-measurement."""
+Simulator cells run on the vectorized engine by default; ``--engine
+heap`` is the escape hatch back to the exact reference engine (cache
+keys carry the engine name, so the two never collide).
 
+Simulator cells are disk-cached (results/bench_cache.json); delete the
+cache to force re-measurement.  A cache file with legacy-format keys
+(pre engine/params-aware keying) aborts the run loudly instead of
+serving stale numbers."""
+
+import argparse
 import sys
 import time
 
 from benchmarks import (
     bench_engine_scaling, bench_fig4_work_sharing, bench_fig5_rtt_cdf,
     bench_fig6_feedback_rtt, bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
-    bench_highspeed_projection, bench_kernels, bench_payload_sweep,
-    bench_roofline, bench_table1_workloads)
-from benchmarks.common import Cache
+    bench_highspeed_projection, bench_kernels, bench_overflow_regime,
+    bench_payload_sweep, bench_roofline, bench_table1_workloads)
+from benchmarks import common
+from benchmarks.common import Cache, LegacyCacheError
 
 MODULES = [
     ("table1", bench_table1_workloads),
@@ -26,15 +34,27 @@ MODULES = [
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
     ("engine_scaling", bench_engine_scaling),
+    ("overflow_regime", bench_overflow_regime),
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    cache = Cache()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single module (e.g. fig4, overflow_regime)")
+    ap.add_argument("--engine", choices=("heap", "vectorized"), default=None,
+                    help="StreamSim backend for simulator cells "
+                         "(default: the SimParams default, vectorized)")
+    args = ap.parse_args()
+    common.DEFAULT_ENGINE = args.engine
+    try:
+        cache = Cache()
+    except LegacyCacheError as e:
+        print(f"FATAL: {e}", file=sys.stderr)
+        raise SystemExit(2)
     print("name,us_per_call,derived")
     for name, mod in MODULES:
-        if only and only != name:
+        if args.only and args.only != name:
             continue
         t0 = time.time()
         for row in mod.run(cache):

@@ -4,7 +4,13 @@ experiment, and print the throughput/overhead comparison (paper Fig 4 in
 miniature).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --engine heap
+
+Runs on the vectorized StreamSim engine by default; ``--engine heap``
+selects the exact one-event-per-hop reference.
 """
+
+import argparse
 
 from repro.core import (
     ResourceSettings, S3MService, establish_prs_session, make_architecture,
@@ -12,6 +18,10 @@ from repro.core import (
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("heap", "vectorized"),
+                    default="vectorized", help="StreamSim backend")
+    args = ap.parse_args()
     print("== deploying the three architectures ==")
     # DTS: NodePort-exposed RabbitMQ (helm release, direct connectivity)
     dts = make_architecture("dts")
@@ -33,7 +43,8 @@ def main() -> None:
     summaries = []
     for arch in ("dts", "prs-haproxy", "prs-stunnel", "mss"):
         r = run_pattern("work_sharing", arch, "dstream", 8,
-                        total_messages=2048, n_runs=1)[0]
+                        total_messages=2048, n_runs=1,
+                        engine=args.engine)[0]
         s = summarize(r)
         summaries.append(s)
         if s.feasible:

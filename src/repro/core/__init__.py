@@ -11,7 +11,8 @@ from repro.core.ds2hpc import ClusterInventory, RabbitMQRelease
 from repro.core.metrics import (
     overhead_table, overhead_vs_baseline, rtt_cdf, summarize,
     throughput_msgs_per_s)
-from repro.core.patterns import CONSUMER_SWEEP, run_pattern, sweep
+from repro.core.patterns import (
+    CONSUMER_SWEEP, overflow_stress, run_pattern, sweep)
 from repro.core.s3m import ResourceSettings, S3MService
 from repro.core.scistream import S2CS, S2UC, establish_prs_session
 from repro.core.simulator import (
@@ -30,7 +31,7 @@ __all__ = [
     "S3MService", "SimConfig", "SimParams", "StreamSim",
     "VectorizedStreamSim", "WORKLOADS", "Workload",
     "establish_prs_session", "get_engine", "get_workload",
-    "make_architecture", "overhead_table", "overhead_vs_baseline",
-    "rtt_cdf", "run_experiment", "run_pattern", "summarize", "sweep",
-    "throughput_msgs_per_s",
+    "make_architecture", "overflow_stress", "overhead_table",
+    "overhead_vs_baseline", "rtt_cdf", "run_experiment", "run_pattern",
+    "summarize", "sweep", "throughput_msgs_per_s",
 ]

@@ -26,7 +26,11 @@ class Summary:
     min_rtt_s: float = float("nan")
     goodput_gbps: float = float("nan")
     rejected: int = 0
+    blocked: int = 0
     n_messages: int = 0
+    #: how many (feasible) runs a multi-seed mean covers; 1 for a single
+    #: run, set by patterns.average_summaries
+    n_runs: int = 1
 
 
 def throughput_msgs_per_s(result: RunResult, warmup_frac: float = 0.05) -> float:
@@ -50,6 +54,7 @@ def summarize(result: RunResult) -> Summary:
                 n_producers=spec.n_producers, n_consumers=spec.n_consumers,
                 feasible=result.feasible,
                 rejected=result.rejected_publishes,
+                blocked=result.blocked_confirms,
                 n_messages=result.n_consumed)
     if not result.feasible:
         return s

@@ -39,10 +39,57 @@ GATHER_REPLY_FACTOR = 1.0 / 256.0
 
 
 def _params(seed: int, **overrides) -> SimParams:
-    p = SimParams(seed=seed)
-    for k, v in overrides.items():
-        setattr(p, k, v)
-    return p
+    # construct in one shot so SimParams.__post_init__ validates the
+    # overrides (engine name, vec_round sub-multiple, positive knobs)
+    return SimParams(seed=seed, **overrides)
+
+
+#: Overflow-regime stress scenario: a regime the paper's configurations
+#: never trigger, exercisable at scale on the vectorized engine.  A small
+#: confirm window, slow consumers and a tight per-queue byte cap push the
+#: work queues through repeated credit-flow blocking episodes
+#: (publisher confirms withheld above ``FLOW_CREDIT x producers`` backlog)
+#: into reject-publish overflow (producers observe rejects and re-publish
+#: after the backoff).  ``queue_cap_msgs`` sits just above the credit
+#: threshold so *both* mechanisms fire: the queue blocks at the threshold,
+#: and the in-flight window landing on top of it overflows the cap.
+#: the stress scenario's SimParams overrides (exported so benchmark cache
+#: fingerprints can cover exactly what the runs used)
+OVERFLOW_STRESS_DEFAULTS = dict(confirm_window=64, prefetch=16,
+                                ack_batch=4, consumer_proc_s=2e-3)
+
+
+def overflow_stress(arch: str, n_consumers: int, *,
+                    workload: str | Workload = "dstream",
+                    total_messages: Optional[int] = None,
+                    queue_cap_msgs: Optional[int] = None,
+                    n_runs: int = 1, seed: int = 0,
+                    engine: Optional[str] = None,
+                    **param_overrides) -> list[RunResult]:
+    """Run the overflow-regime stress cell (feedback pattern, equal
+    producers/consumers, up to 1024 consumers on the vectorized engine).
+
+    ``queue_cap_msgs`` defaults to ~6% above the credit threshold
+    (``FLOW_CREDIT x producers``) so both mechanisms fire; pass a small
+    explicit cap for large consumer counts to get a pure reject-publish
+    regime at affordable message volumes (the credit threshold itself
+    scales with producers).  Returns the per-seed :class:`RunResult`
+    list; results report nonzero ``rejected_publishes`` (and, in the
+    default both-mechanisms regime, ``blocked_confirms``)."""
+    from repro.core.broker import ClassicQueue
+    wl = get_workload(workload) if isinstance(workload, str) else workload
+    if queue_cap_msgs is None:
+        queue_cap_msgs = int(ClassicQueue.FLOW_CREDIT * n_consumers * 1.06)
+    if total_messages is None:
+        # enough volume for repeated blocking/overflow episodes per queue
+        total_messages = max(8192, 4 * queue_cap_msgs)
+    for k, v in OVERFLOW_STRESS_DEFAULTS.items():
+        param_overrides.setdefault(k, v)
+    param_overrides.setdefault("queue_max_bytes",
+                               queue_cap_msgs * wl.payload_bytes)
+    return run_pattern("feedback", arch, wl, n_consumers,
+                       total_messages=total_messages, n_runs=n_runs,
+                       seed=seed, engine=engine, **param_overrides)
 
 
 def run_pattern(pattern: str, arch: str, workload: str | Workload,
@@ -50,7 +97,7 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
                 total_messages: int = 8192,
                 n_runs: int = 3,
                 seed: int = 0,
-                engine: str = "heap",
+                engine: Optional[str] = None,
                 inventory: Optional[ClusterInventory] = None,
                 cal: Optional[Calibration] = None,
                 **param_overrides) -> list[RunResult]:
@@ -59,12 +106,14 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
     The paper averages three runs per data point; we run ``n_runs`` seeds.
     Work-sharing patterns use equal producer/consumer counts; broadcast
     patterns use a single producer (paper §5.2).  ``engine`` selects the
-    simulator backend: ``"heap"`` (exact, one event per message-hop) or
-    ``"vectorized"`` (batched array engine — orders of magnitude faster at
-    high consumer counts; see :mod:`repro.core.vectorized`).
+    simulator backend: ``"vectorized"`` (the default — batched array
+    engine, orders of magnitude faster at high consumer counts; see
+    :mod:`repro.core.vectorized`) or ``"heap"`` (the exact one-event-per-
+    message-hop reference).  ``None`` uses ``SimParams.engine``'s default.
     """
     wl = get_workload(workload) if isinstance(workload, str) else workload
-    param_overrides.setdefault("engine", engine)
+    if engine is not None:
+        param_overrides.setdefault("engine", engine)
     n_producers = 1 if pattern.startswith("broadcast") else n_consumers
     if pattern == "broadcast_gather" and "reply_factor" not in param_overrides:
         param_overrides["reply_factor"] = GATHER_REPLY_FACTOR
@@ -88,7 +137,7 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
 def sweep(pattern: str, archs: Sequence[str], workload: str,
           consumers: Sequence[int] = CONSUMER_SWEEP, *,
           total_messages: int = 8192, n_runs: int = 3, seed: int = 0,
-          engine: str = "heap",
+          engine: Optional[str] = None,
           inventory: Optional[ClusterInventory] = None,
           cal: Optional[Calibration] = None,
           **param_overrides) -> list[Summary]:
@@ -106,17 +155,28 @@ def sweep(pattern: str, archs: Sequence[str], workload: str,
 
 
 def average_summaries(ss: Sequence[Summary]) -> Summary:
-    """Average the metric fields over repeated runs (paper: 3-run mean)."""
+    """Average the metric fields over repeated runs (paper: 3-run mean).
+
+    Averages over the *feasible subset* and records how many runs went
+    into the mean in ``Summary.n_runs`` — a mixed-feasibility cell (some
+    seeds infeasible) must not silently report a single seed's full
+    metrics as a multi-run mean.  With no feasible run at all, the cell
+    is reported infeasible with ``n_runs=0``."""
     import numpy as np
-    first = ss[0]
-    if not all(s.feasible for s in ss):
-        return first
-    out = Summary(**{**first.__dict__})
+    feas = [s for s in ss if s.feasible]
+    if not feas:
+        out = Summary(**{**ss[0].__dict__})
+        out.feasible = False
+        out.n_runs = 0
+        return out
+    out = Summary(**{**feas[0].__dict__})
+    out.n_runs = len(feas)
     for f in ("throughput_msgs_s", "median_rtt_s", "p95_rtt_s",
               "min_rtt_s", "goodput_gbps"):
-        vals = [getattr(s, f) for s in ss]
+        vals = [getattr(s, f) for s in feas]
         vals = [v for v in vals if np.isfinite(v)]
         setattr(out, f, float(np.mean(vals)) if vals else float("nan"))
-    out.rejected = int(np.mean([s.rejected for s in ss]))
-    out.n_messages = int(np.mean([s.n_messages for s in ss]))
+    out.rejected = int(np.mean([s.rejected for s in feas]))
+    out.blocked = int(np.mean([s.blocked for s in feas]))
+    out.n_messages = int(np.mean([s.n_messages for s in feas]))
     return out

@@ -20,8 +20,11 @@ acknowledgements, reject-publish overflow with producer re-publish.
 Two engines implement the same experiment contract (the :class:`Engine`
 protocol): this module's heap engine (one event per hop — the reference),
 and the batched array engine in :mod:`repro.core.vectorized` that computes
-whole message cohorts with prefix-scan FIFO math.  Select via
-``SimParams(engine="heap"|"vectorized")`` (alias :data:`SimConfig`).
+whole message cohorts with prefix-scan FIFO math.  The vectorized engine
+is the default; select via ``SimParams(engine="vectorized"|"heap")``
+(alias :data:`SimConfig`).  Both model the full flow-control stack,
+including credit-flow confirm withholding and reject-publish overflow
+with producer re-publish.
 """
 
 from __future__ import annotations
@@ -66,18 +69,59 @@ class SimParams:
     max_events: int = 30_000_000
     max_sim_time: float = 36_000.0
     consumer_proc_s: Optional[float] = None   # override per-workload default
-    engine: str = "heap"            # "heap" (reference) | "vectorized"
-    #: vectorized engine: per-producer messages per cohort round; smaller
-    #: rounds interleave cross-flow traffic more finely (closer to the
-    #: heap engine's event order) at the cost of more python-level rounds
-    vec_round: int = 8
+    #: per-data-queue byte cap (None = the broker's RAM-budget default).
+    #: Small caps push the run into the reject-publish overflow regime.
+    queue_max_bytes: Optional[int] = None
+    engine: str = "vectorized"      # "vectorized" (default) | "heap" (reference)
+    #: vectorized engine: per-producer messages per cohort round; must be a
+    #: sub-multiple of the confirm window.  Smaller rounds interleave
+    #: cross-flow traffic more finely (closer to the heap engine's event
+    #: order) at the cost of more python-level rounds.  None (default)
+    #: auto-tunes: 8, shrunk when a shared DSN-NIC/tunnel pipe is
+    #: estimated saturated and few flows are in play (see
+    #: :mod:`repro.core.vectorized`).
+    vec_round: Optional[int] = None
     #: vectorized engine: how far (seconds) past the next event's key a
     #: cohort may be served in one batch; 0 enforces strict global time
     #: ordering at every shared resource, larger values trade fidelity
     #: for fewer, bigger array operations.  None auto-scales with client
     #: count (aggregate metrics become insensitive to ordering slack as
-    #: the number of concurrent flows grows).
+    #: the number of concurrent flows grows) and shrinks alongside
+    #: ``vec_round`` under detected saturation.
     vec_horizon_s: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        # resolve the engine name early so a typo fails at construction,
+        # not deep inside a sweep
+        get_engine(self.engine)
+        if self.confirm_window < 2:
+            raise ValueError(
+                f"confirm_window must be >= 2, got {self.confirm_window}")
+        for name in ("prefetch", "ack_batch", "n_work_queues"):
+            if getattr(self, name) < 1:
+                raise ValueError(
+                    f"{name} must be >= 1, got {getattr(self, name)}")
+        if self.queue_max_bytes is not None and self.queue_max_bytes <= 0:
+            raise ValueError(
+                f"queue_max_bytes must be positive, got {self.queue_max_bytes}")
+        if self.vec_round is not None:
+            if self.vec_round < 1:
+                raise ValueError(
+                    f"vec_round must be >= 1 (got {self.vec_round}); use "
+                    f"None for auto-tuning")
+            if self.vec_round > self.confirm_window:
+                raise ValueError(
+                    f"vec_round={self.vec_round} exceeds the confirm window "
+                    f"({self.confirm_window}): publish rounds could never "
+                    f"be gated by confirms")
+            if self.confirm_window % self.vec_round != 0:
+                raise ValueError(
+                    f"vec_round={self.vec_round} must be a sub-multiple of "
+                    f"confirm_window={self.confirm_window} so every round "
+                    f"is gated by whole earlier rounds")
+        if self.vec_horizon_s is not None and self.vec_horizon_s < 0:
+            raise ValueError(
+                f"vec_horizon_s must be >= 0, got {self.vec_horizon_s}")
 
 
 #: the user-facing name for selecting an engine: SimConfig(engine=...)
@@ -106,6 +150,7 @@ class RunResult:
     publish_starts: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
     rejected_publishes: int = 0
+    blocked_confirms: int = 0       # confirms withheld by credit-flow
     redelivered: int = 0
     sim_time: float = 0.0
     n_events: int = 0
@@ -139,6 +184,17 @@ def check_feasibility(arch: Architecture, spec: ExperimentSpec) -> None:
         raise InfeasibleConfiguration(
             f"{arch.name}: {spec.n_producers} producer "
             f"connections exceed tunnel connection limit {limit}")
+    qcap = spec.params.queue_max_bytes
+    if qcap is not None:
+        need = spec.workload.payload_bytes
+        if spec.pattern in ("feedback", "broadcast_gather"):
+            need = max(need, max(1, int(need * spec.params.reply_factor)))
+        if qcap < need:
+            # a queue that cannot hold one message would reject every
+            # publish forever (producers retry until max_sim_time)
+            raise InfeasibleConfiguration(
+                f"queue_max_bytes={qcap} cannot hold a single "
+                f"{need}-byte message; every publish would be rejected")
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +261,7 @@ class StreamSim:
         self.rtts: list[float] = []
         self.publish_starts: list[float] = []
         self.rejected = 0
+        self.blocked = 0
         # flow state
         self._blocked_confirms: dict[str, list[Callable[[], None]]] = {}
         self._done = False
@@ -257,11 +314,12 @@ class StreamSim:
         per_producer = spec.total_messages // nP
         self._expected_consumed = per_producer * nP
         pat = spec.pattern
+        qcap = p.queue_max_bytes          # None = broker RAM-budget default
         if pat in ("work_sharing", "feedback"):
             nq = min(p.n_work_queues, nC)
             self._work_queues = [f"work:{i}" for i in range(nq)]
             for q in self._work_queues:
-                self.broker.declare_queue(q)
+                self.broker.declare_queue(q, max_bytes=qcap)
             for c in range(nC):
                 q = self._work_queues[c % nq]
                 self.broker.register_consumer(
@@ -271,7 +329,8 @@ class StreamSim:
                 self._replies_expected = self._expected_consumed
                 for pr in range(nP):
                     rq = f"reply:{pr}"
-                    self.broker.declare_queue(rq, control=False)
+                    self.broker.declare_queue(rq, control=False,
+                                              max_bytes=qcap)
                     self.broker.register_consumer(
                         f"p{pr}", rq, prefetch=p.prefetch,
                         connected_node=pr % self.inv.n_dsn)
@@ -284,7 +343,7 @@ class StreamSim:
             qs = []
             for c in range(nC):
                 qn = f"bq:{c}"
-                self.broker.declare_queue(qn)
+                self.broker.declare_queue(qn, max_bytes=qcap)
                 self.broker.register_consumer(
                     f"c{c}", qn, prefetch=p.prefetch,
                     connected_node=(c + 1) % self.inv.n_dsn)
@@ -292,7 +351,7 @@ class StreamSim:
             self.broker.declare_fanout("bcast", qs)
             if pat == "broadcast_gather":
                 self._replies_expected = per_producer * nC
-                self.broker.declare_queue("gather")
+                self.broker.declare_queue("gather", max_bytes=qcap)
                 self.broker.register_consumer("p0", "gather",
                                               prefetch=p.prefetch,
                                               connected_node=0)
@@ -354,6 +413,7 @@ class StreamSim:
                 (qn for qn in queued if self.broker.queues[qn].flow_blocked),
                 None)
             if blocked_on is not None:
+                self.blocked += 1
                 self._blocked_confirms.setdefault(blocked_on, []).append(confirm)
             else:
                 self._at(t + self.arch.control_latency_s(), confirm)
@@ -519,6 +579,7 @@ class StreamSim:
             rtts=np.asarray(self.rtts),
             publish_starts=np.asarray(self.publish_starts),
             rejected_publishes=self.rejected,
+            blocked_confirms=self.blocked,
             redelivered=redeliv,
             sim_time=self.now, n_events=self.n_events)
 

@@ -1,4 +1,4 @@
-"""Vectorized batched StreamSim engine.
+"""Vectorized batched StreamSim engine (the default engine).
 
 The reference engine in :mod:`repro.core.simulator` pushes one heap event
 per message-hop, which is exact but caps interactive sweeps at ~10^5
@@ -34,6 +34,29 @@ Key ideas
   in RabbitMQ); departs are gated on ack arrivals, and acks follow the
   broker's ack-multiple batching (every ``ack_batch`` deliveries, or
   immediately once the window is full).
+* **Batched credit flow.**  Each queue tracks its un-drained backlog with
+  an enqueue counter and a min-heap of release (depart) times.  When a
+  cohort's enqueues push the backlog past the RabbitMQ credit threshold
+  (``credit_flow_default_credit x publishers``, as in the heap broker),
+  those members' publisher confirms are *withheld*: they resolve only
+  once the batched pump has drained the queue back to half the threshold,
+  at the depart time that crossed the resume mark (+ control latency).
+  Withheld confirms stall the publish-round frontier exactly like the
+  heap engine's channel blocking.
+* **Reject-publish overflow as re-injection rounds.**  When a queue (or
+  any fanout target, atomically) is at its byte cap at a member's arrival
+  time, the publish is rejected and the member re-enters the publish
+  path as a retry cohort after ``publish_retry_s`` — the producer
+  re-publish backoff — repeating until the drain admits it.  Reply
+  publishes get the same treatment on reply/gather queues.
+* **Utilization-triggered finer interleaving.**  A static bottleneck
+  analysis of the hop graph estimates each shared DSN-side pipe's
+  (``dsn_*``, ``tunnel``) utilization at the configured demand.  When one
+  is saturated and few flows are in play (ordering detail then matters
+  most), auto mode shrinks ``vec_round`` and ``vec_horizon_s`` so cohorts
+  interleave at close to per-message granularity through the contended
+  resource.  Explicit ``vec_round``/``vec_horizon_s`` settings are always
+  honored.
 * **Hop-graph slot alignment.**  Paths that differ only by optional
   broker-internal hops (queue homed on another node) are aligned on their
   longest common prefix/suffix of resource classes so shared bottlenecks
@@ -44,14 +67,15 @@ Fidelity
 
 The engine reproduces the heap engine's aggregate metrics (throughput,
 median/p95 RTT, overhead ratios) to ~1% on most of the paper's operating
-points (see tests/test_engine_parity.py); the two known exceptions are
-DTS work-sharing throughput and DTS/PRS gather-leg RTTs, which sit within
-~5-6% — both residuals trace to second-order FIFO-interleaving detail at
-the saturated DSN NICs that batch serving cannot reproduce exactly.
-Not modeled: reject-publish overflow and credit-flow confirm withholding —
-the paper's configurations keep queue backlogs far below both limits
-(bounded by the confirm windows) — and message redelivery (no consumer
-crashes occur inside an engine run).
+points, and to <=3% on the previously-documented outliers (DTS
+work-sharing throughput, DTS feedback RTT, PRS gather RTT) thanks to the
+utilization-triggered interleaving — see tests/test_engine_parity.py.
+Credit-flow confirm withholding and reject-publish overflow (with the
+producer re-publish backoff) *are* modeled, in batched form, and parity
+in the overflow regime (nonzero ``rejected_publishes``, active channel
+blocking) is enforced by the overflow block of the parity suite.  Still
+not modeled: message redelivery (no consumer crashes occur inside an
+engine run).
 """
 
 from __future__ import annotations
@@ -64,9 +88,20 @@ import numpy as np
 
 from repro.core.architectures import (
     Architecture, PathElement, ResourceSpec, make_architecture)
+from repro.core.broker import ClassicQueue
 from repro.core.ds2hpc import ClusterInventory
 from repro.core.simulator import (
     ENGINES, ExperimentSpec, RunResult, check_feasibility)
+
+#: RabbitMQ credit_flow_default_credit, shared with the heap broker model
+FLOW_CREDIT = ClassicQueue.FLOW_CREDIT
+
+#: shrink vec_round/vec_horizon_s (auto mode) when a shared DSN-side pipe
+#: is estimated at >= this fraction of the run's bottleneck...
+SATURATION_UTIL = 0.85
+#: ...and no more than this many concurrent flows are in play (aggregate
+#: metrics stop depending on exact cross-flow ordering beyond it)
+SATURATION_MAX_CLIENTS = 64
 
 # ---------------------------------------------------------------------------
 # Batched FIFO resources
@@ -182,6 +217,8 @@ class VectorizedStreamSim:
                         if self.p.consumer_proc_s is not None
                         else spec.workload.proc_time_s())
         self.n_events = 0
+        self.rejected = 0
+        self.blocked = 0
         self._path_cache: dict = {}
         self._align_cache: dict = {}
         self._channels: dict = {}
@@ -198,6 +235,127 @@ class VectorizedStreamSim:
         else:
             self._slack = max(1e-3, 1e-3 * (spec.n_producers
                                             + spec.n_consumers) / 16.0)
+        # utilization-triggered finer interleaving (auto knobs only): at
+        # low flow counts with a saturated shared DSN-side pipe, ordering
+        # detail dominates the residual — interleave near per-message
+        self._round = self.p.vec_round if self.p.vec_round is not None else 8
+        self._fine_pump = False
+        self.dsn_utilization, self.publish_surplus = self._cost_model()
+        n_clients = spec.n_producers + spec.n_consumers
+        if n_clients <= SATURATION_MAX_CLIENTS:
+            if self.dsn_utilization >= SATURATION_UTIL:
+                # window-aware per-message release: with few flows on a
+                # saturated pipe, the adaptive consumer shift (windows on
+                # congested NICs close, round-robin skips them) is a
+                # first-order throughput effect the batched fast path
+                # cannot reproduce
+                self._fine_pump = True
+                if self.p.vec_round is None:
+                    self._round = 2
+                if self.p.vec_horizon_s is None:
+                    self._slack *= 0.25
+
+    # -- static bottleneck analysis --------------------------------------------
+    def _cost_model(self) -> tuple[float, float]:
+        """Returns ``(dsn_utilization, publish_surplus)``.
+
+        Accumulates, per resource, the busy seconds one *system message*
+        (one consumed copy) induces, using the same node/queue placement
+        as the run methods.  The resource with the largest per-message
+        busy time is the bottleneck.
+
+        ``dsn_utilization`` — the busiest shared DSN-side pipe
+        (``dsn_*``/``tunnel``) as a fraction of the bottleneck; a pipe
+        near 1.0 serves back-to-back, where batch-order detail matters
+        most.
+
+        ``publish_surplus`` — ``1 - (publish-leg bottleneck / overall
+        bottleneck)``: the fraction of published messages that pile up as
+        queue backlog because producers outpace the drain.  Scaled by the
+        per-queue message volume this bounds the reachable backlog, which
+        decides whether credit-flow blocking / overflow can fire."""
+        spec, p, inv = self.spec, self.p, self.inv
+        nP, nC = spec.n_producers, spec.n_consumers
+        size = spec.workload.payload_bytes
+        rsize = max(1, int(size * p.reply_factor))
+        legs: list[tuple[str, tuple, float, int]] = []
+        pat = spec.pattern
+        if pat in ("work_sharing", "feedback"):
+            nq = min(p.n_work_queues, nC)
+            q_home = [q % inv.n_dsn for q in range(nq)]
+            reply_home = [(nq + pr) % inv.n_dsn for pr in range(nP)]
+            for pr in range(nP):
+                for qi in range(nq):
+                    legs.append(("publish_path",
+                                 (pr % inv.n_producer_nodes, pr % inv.n_dsn,
+                                  q_home[qi]), 1.0 / (nP * nq), size))
+            members = [[c for c in range(nC) if c % nq == qi]
+                       for qi in range(nq)]
+            for qi in range(nq):
+                for c in members[qi]:
+                    legs.append(("delivery_path",
+                                 ((c + 1) % inv.n_dsn, q_home[qi],
+                                  c % inv.n_consumer_nodes),
+                                 1.0 / (nq * len(members[qi])), size))
+            if pat == "feedback":
+                # collapse the (consumer x producer) cross product over
+                # the <= n_dsn distinct reply homes
+                home_w: dict[int, float] = {}
+                for h in reply_home:
+                    home_w[h] = home_w.get(h, 0.0) + 1.0 / nP
+                for c in range(nC):
+                    for h, w in home_w.items():
+                        legs.append(("reply_publish_path",
+                                     (c % inv.n_consumer_nodes,
+                                      (c + 1) % inv.n_dsn, h),
+                                     w / nC, rsize))
+                for pr in range(nP):
+                    legs.append(("reply_delivery_path",
+                                 (reply_home[pr], pr % inv.n_dsn,
+                                  pr % inv.n_producer_nodes), 1.0 / nP,
+                                 rsize))
+        else:
+            gather_home = nC % inv.n_dsn
+            legs.append(("publish_path", (0, 0, 0), 1.0 / nC, size))
+            for c in range(nC):
+                legs.append(("delivery_path",
+                             ((c + 1) % inv.n_dsn, c % inv.n_dsn,
+                              c % inv.n_consumer_nodes), 1.0 / nC, size))
+            if pat == "broadcast_gather":
+                for c in range(nC):
+                    legs.append(("reply_publish_path",
+                                 (c % inv.n_consumer_nodes,
+                                  (c + 1) % inv.n_dsn, gather_home),
+                                 1.0 / nC, rsize))
+                legs.append(("reply_delivery_path", (gather_home, 0, 0),
+                             1.0, rsize))
+        cost: dict[str, float] = {}
+        pub_cost: dict[str, float] = {}
+        for flow, combo, w, sz in legs:
+            for el in getattr(self.arch, flow)(*combo):
+                if el.resource is None:
+                    continue
+                rs = self.resources[el.resource].spec
+                nb = sz * el.byte_factor + el.extra_bytes
+                if rs.kind == "pipe":
+                    sec = rs.service_s + (nb / rs.rate_Bps
+                                          if rs.rate_Bps else 0.0)
+                else:
+                    sec = ((rs.service_s + nb * rs.per_byte_s)
+                           / max(1, rs.servers))
+                cost[el.resource] = cost.get(el.resource, 0.0) + w * sec
+                if flow == "publish_path":
+                    pub_cost[el.resource] = (pub_cost.get(el.resource, 0.0)
+                                             + w * sec)
+        c_max = max(max(cost.values(), default=0.0),
+                    self._proc_s / max(1, nC))
+        if c_max <= 0.0:
+            return 0.0, 0.0
+        shared = [v for k, v in cost.items()
+                  if k.startswith(("dsn_in", "dsn_out", "dsn_int", "tunnel"))]
+        pub_max = max(pub_cost.values(), default=0.0)
+        return (max(shared, default=0.0) / c_max,
+                max(0.0, 1.0 - pub_max / c_max))
 
     # -- helpers ---------------------------------------------------------------
     def _jit(self, n: int) -> np.ndarray:
@@ -247,6 +405,121 @@ class VectorizedStreamSim:
         aligned, n_slots = self._align_cache[ak]
         idx_by = {u: np.nonzero(inv == u)[0] for u in aligned}
         return aligned, idx_by, n_slots
+
+    # -- queue backlog accounting (credit flow + overflow) ---------------------
+    def _queue_state(self, qkey, consumers, size: int, *,
+                     credit: Optional[int] = None,
+                     cap_msgs: Optional[int] = None) -> dict:
+        """Get/create one broker queue's batched state.
+
+        Beyond the pump state (consumers + pending segments), queues whose
+        publishers are subject to credit flow or whose byte budget can
+        overflow track their un-drained backlog: ``n_enq`` counts
+        enqueues, released depart times sit in a min-heap and are popped
+        (in time order) into ``departed`` as the backlog is queried — so
+        ``n_enq - departed`` is the ready count at the query time, exactly
+        the heap broker's ``len(q.ready)``."""
+        q = self._queues.get(qkey)
+        if q is None:
+            q = {"consumers": [int(c) for c in consumers], "pending": [],
+                 "size": size, "credit": credit, "cap": cap_msgs,
+                 "track": credit is not None or cap_msgs is not None,
+                 "n_enq": 0, "released": 0, "departed": 0,
+                 "depart_heap": [], "last_pop_t": 0.0, "deferred": []}
+            self._queues[qkey] = q
+            for c in q["consumers"]:
+                self._chan_queue[c] = qkey
+        return q
+
+    def _pop_departs(self, q: dict, t: float) -> None:
+        """Advance the depart cursor: count releases that left by ``t``."""
+        h = q["depart_heap"]
+        while h and h[0] <= t:
+            q["last_pop_t"] = heapq.heappop(h)
+            q["departed"] += 1
+
+    def _record_departs(self, q: dict, departs: np.ndarray) -> None:
+        """Register released deliveries' depart times; resolves any
+        credit-flow-deferred confirms the new drains now admit."""
+        if not q["track"]:
+            return
+        h = q["depart_heap"]
+        for d in departs:
+            heapq.heappush(h, float(d))
+        q["released"] += departs.size
+        if q["deferred"]:
+            self._try_resume(q)
+
+    def _try_resume(self, q: dict, force: bool = False) -> bool:
+        """Release the queue's withheld confirms once drained to half the
+        credit threshold (the heap broker's ``flow_resume``), at the
+        depart time that crossed the mark + control latency."""
+        if not q["deferred"]:
+            return False
+        target = q["n_enq"] - q["credit"] // 2
+        if q["released"] < target and not force:
+            return False
+        while q["departed"] < target and q["depart_heap"]:
+            q["last_pop_t"] = heapq.heappop(q["depart_heap"])
+            q["departed"] += 1
+        t_resume = q["last_pop_t"] + self.arch.control_latency_s()
+        resolvers, q["deferred"] = q["deferred"], []
+        for fn in resolvers:
+            fn(t_resume)
+        return True
+
+    def _enqueue_batch(self, qs: list, t_enq: np.ndarray
+                       ) -> tuple[np.ndarray, list]:
+        """Admit a publish cohort onto one queue (or atomically onto all
+        fanout targets).  Returns ``(accepted_mask, blocked_on)`` where
+        ``blocked_on[k]`` is the queue whose credit threshold message
+        ``k`` crossed (None when its confirm may fire immediately).
+
+        Fast path: when even a zero-drain upper bound on every target's
+        backlog stays below both the byte cap and the credit threshold,
+        the whole cohort is admitted without per-message accounting."""
+        n = t_enq.size
+        none_blocked = [None] * n
+        tracked = [q for q in qs if q["track"]]
+        if not tracked:
+            return np.ones(n, dtype=bool), none_blocked
+        t_min = float(t_enq.min())
+        fast = True
+        for q in tracked:
+            self._pop_departs(q, t_min)
+            hi = q["n_enq"] + n - q["departed"]
+            if ((q["cap"] is not None and hi > q["cap"])
+                    or (q["credit"] is not None and hi > q["credit"])):
+                fast = False
+                break
+        if fast:
+            for q in tracked:
+                q["n_enq"] += n
+            return np.ones(n, dtype=bool), none_blocked
+        # slow path: arrival order, time-resolved backlog per target —
+        # the heap engine's per-message offer()/flow_blocked sequence
+        accept = np.zeros(n, dtype=bool)
+        blocked_on = none_blocked
+        for k in np.argsort(t_enq, kind="stable"):
+            t = float(t_enq[k])
+            full = False
+            for q in tracked:
+                self._pop_departs(q, t)
+                if (q["cap"] is not None
+                        and q["n_enq"] - q["departed"] >= q["cap"]):
+                    full = True
+                    break
+            if full:
+                continue
+            accept[k] = True
+            for q in tracked:
+                q["n_enq"] += 1
+            for q in tracked:
+                if (q["credit"] is not None
+                        and q["n_enq"] - q["departed"] > q["credit"]):
+                    blocked_on[k] = q
+                    break
+        return accept, blocked_on
 
     # -- batch event loop ------------------------------------------------------
     def _push_transit(self, t0: np.ndarray, size: int, flow: str,
@@ -363,6 +636,15 @@ class VectorizedStreamSim:
                 break
             self._serve_slot(batch)
 
+    def _force_resume(self) -> bool:
+        """Last-resort deadlock breaker for the drained-out tail: resolve
+        any still-deferred confirms at the release clock."""
+        any_resolved = False
+        for q in self._queues.values():
+            if q["deferred"] and self._try_resume(q, force=True):
+                any_resolved = True
+        return any_resolved
+
     def _drain_all(self) -> None:
         """Drain the event heap; when only unflushed batch acks hold back
         window-waiting deliveries (the tail of a run), force-flush them —
@@ -382,9 +664,13 @@ class VectorizedStreamSim:
                     if c in self._chan_queue:
                         flushed.append(self._chan_queue[c])
             if not flushed:
+                if self._force_resume() and self._heap:
+                    continue
                 return
             self._pump_queues(flushed)
             if not self._heap:
+                if self._force_resume() and self._heap:
+                    continue
                 return
 
     # -- prefetch-windowed delivery (the batched broker pump) ------------------
@@ -407,12 +693,7 @@ class VectorizedStreamSim:
         partial cohorts are normal."""
         cohort = {"combos_fn": combos_fn, "size": size, "flow": flow,
                   "consumer": consumer, "recv": recv, "on_seen": on_seen}
-        q = self._queues.get(qkey)
-        if q is None:
-            q = {"consumers": [int(c) for c in consumers], "pending": []}
-            self._queues[qkey] = q
-            for c in q["consumers"]:
-                self._chan_queue[c] = qkey
+        q = self._queue_state(qkey, consumers, size)
         o = np.argsort(t_ready, kind="stable")
         q["pending"].append({"cohort": cohort, "idx": member_idx[o],
                              "t": t_ready[o], "pos": 0})
@@ -430,12 +711,14 @@ class VectorizedStreamSim:
                 seg = q["pending"][0]
                 n_rem = seg["idx"].size - seg["pos"]
                 k = len(ids)
-                caps = {c: P - (self._chan(c)["assigned"]
-                                - self._chan(c)["acked"]) for c in ids}
                 # fast path: every window stays open through a strict
                 # round-robin split of the whole segment remainder
-                if all(caps[ids[r]] >= (n_rem - r + k - 1) // k
-                       for r in range(k)):
+                # (skipped in fine-pump mode — see __init__)
+                if not self._fine_pump and \
+                        all((P - (self._chan(c)["assigned"]
+                                  - self._chan(c)["acked"]))
+                            >= (n_rem - r + k - 1) // k
+                            for r, c in enumerate(ids)):
                     sl = slice(seg["pos"], seg["pos"] + n_rem)
                     t_sl, m_sl = seg["t"][sl], seg["idx"][sl]
                     cons = np.array(ids)[np.arange(n_rem) % k]
@@ -455,44 +738,66 @@ class VectorizedStreamSim:
                     q["consumers"] = ids = ids[n_rem % k:] + ids[:n_rem % k]
                     releases.setdefault(id(seg["cohort"]), []).append(
                         (seg["cohort"], m_sl, cons, j_all, depart))
+                    self._record_departs(q, depart)
                     seg["pos"] += n_rem
                     q["pending"].pop(0)
                     continue
-                # slow path: per message, next consumer with an open
-                # window.  Released in small chunks so ack arrivals (the
-                # commits that re-pump this queue) interleave with the
-                # assignment like they do in the heap engine — releasing a
-                # whole segment at once against a frozen ack clock
-                # over-steals toward whichever windows happen to be open.
+                # slow path: per message, the heap broker's next_delivery
+                # in virtual time — the first consumer (rotated
+                # round-robin) whose basic.qos window is *open at the
+                # message's ready time* takes it; with every window
+                # closed, the earliest known re-opening (the ack-arrival
+                # pump that would pop it) takes the delivery.  This is
+                # what shifts load toward less-congested consumers: a
+                # consumer behind a saturated NIC acks late, its window
+                # stays closed, and the round-robin skips it.  Released
+                # in small chunks so ack arrivals (the commits that
+                # re-pump this queue) interleave with the assignment.
                 chunk = max(1, self.p.ack_batch)
-                open_ids = [c for c in ids if caps[c] > 0]
+                chans = [self._chan(c) for c in ids]
+                # next-assignment window gate per consumer (NaN = the ack
+                # that would re-open it hasn't been computed yet)
+                g = np.empty(len(ids))
+                for x, ch in enumerate(chans):
+                    j = ch["assigned"]
+                    g[x] = -np.inf if j < P else ch["ack_time"][j - P]
+                order = np.arange(len(ids))     # rotated round-robin
                 rel = []
-                oi = 0
-                while (seg["pos"] < seg["idx"].size and len(rel) < chunk
-                       and open_ids):
-                    chosen = open_ids[oi % len(open_ids)]
-                    caps[chosen] -= 1
-                    if caps[chosen] <= 0:
-                        open_ids.remove(chosen)
+                while seg["pos"] < seg["idx"].size and len(rel) < chunk:
+                    t = float(seg["t"][seg["pos"]])
+                    go = g[order]
+                    with np.errstate(invalid="ignore"):
+                        open_pos = np.nonzero(go <= t)[0]
+                    if open_pos.size:
+                        pos = int(open_pos[0])
+                        gate = float(go[pos])
                     else:
-                        oi += 1
-                    ids.remove(chosen)
-                    ids.append(chosen)
-                    ch = self._chan(chosen)
+                        finite = np.isfinite(go)
+                        if not finite.any():
+                            break   # re-openings unknown: wait for acks
+                        pos = int(np.argmin(np.where(finite, go, np.inf)))
+                        gate = float(go[pos])
+                    x = int(order[pos])
+                    order = np.append(np.delete(order, pos), x)
+                    ch = chans[x]
                     self._chan_grow(ch, 1)
                     j = ch["assigned"]
                     ch["assigned"] += 1
-                    gate = ch["ack_time"][j - P] if j >= P else -np.inf
-                    rel.append((seg["idx"][seg["pos"]], chosen, j,
-                                max(seg["t"][seg["pos"]], gate)))
+                    g[x] = (-np.inf if j + 1 < P
+                            else ch["ack_time"][j + 1 - P])
+                    rel.append((seg["idx"][seg["pos"]], ids[x], j,
+                                max(t, gate)))
                     seg["pos"] += 1
+                q["consumers"] = ids = [ids[x] for x in order]
                 if rel:
+                    rel_depart = np.array([r[3] for r in rel])
                     releases.setdefault(id(seg["cohort"]), []).append(
                         (seg["cohort"],
                          np.array([r[0] for r in rel]),
                          np.array([r[1] for r in rel]),
                          np.array([r[2] for r in rel]),
-                         np.array([r[3] for r in rel])))
+                         rel_depart))
+                    self._record_departs(q, rel_depart)
                 if seg["pos"] == seg["idx"].size:
                     q["pending"].pop(0)
                 # leave after one slow-path chunk: the commits of what was
@@ -597,25 +902,68 @@ class VectorizedStreamSim:
         reply_size = max(1, int(size * p.reply_factor))
         recv_rep = self._recv_latency(reply_size)
 
-        R = max(1, min(W, p.vec_round))
-        n_rounds = -(-per_producer // R)
-        pub_done = np.zeros(n_rounds, dtype=bool)
-        state = {"frontier": 0, "next_launch": 0}
+        # queue states: work queues see all nP producers' credit, reply
+        # queues are exempt from credit flow (the heap engine never
+        # withholds reply confirms) but share the byte cap
+        cap = (p.queue_max_bytes // size if p.queue_max_bytes else None)
+        rcap = (p.queue_max_bytes // reply_size if p.queue_max_bytes
+                else None)
+        work_q = [self._queue_state(("work", qi), q_consumers[qi], size,
+                                    credit=FLOW_CREDIT * nP, cap_msgs=cap)
+                  for qi in range(nq)]
+        if feedback:
+            for pr in range(nP):
+                self._queue_state(("reply", pr), [nC + pr], reply_size,
+                                  cap_msgs=rcap)
 
-        def gate_round(r: int) -> int:
-            """Last publish round whose confirms gate round ``r``'s sends
-            (message (r+1)*R-1 waits on the confirm of that index - W)."""
-            return ((r + 1) * R - 1 - W) // R
+        R = max(1, min(W, self._round))
+        # overflow regime reachable (byte cap below the per-queue volume,
+        # or a publish surplus that can pile backlog past the credit
+        # threshold): per-message rounds reproduce the heap engine's
+        # burst-and-retry dynamics at the blocking boundary
+        per_q = per_producer * nP / nq
+        if self.p.vec_round is None and (
+                (cap is not None and cap < per_q)
+                or FLOW_CREDIT * nP < self.publish_surplus * per_q):
+            R = 1
+        n_rounds = -(-per_producer // R)
+        # per-producer resolved-confirm prefixes: round r may launch once
+        # every confirm its send gates read (indices < hi - W) is
+        # resolved.  Message-granular like the heap engine's confirm
+        # window, so a credit-flow deferral stalls exactly the sends it
+        # gates — the producers still land W more messages first.
+        conf_ok = np.zeros((nP, per_producer), dtype=bool)
+        prefix = np.zeros(nP, dtype=np.int64)
+        state = {"next_launch": 0}
+
+        def mark_confirmed(pr_arr, i_arr) -> None:
+            conf_ok[pr_arr, i_arr] = True
+            for pr in np.unique(pr_arr):
+                j = int(prefix[pr])
+                while j < per_producer and conf_ok[pr, j]:
+                    j += 1
+                prefix[pr] = j
+            advance_pubs()
 
         def advance_pubs() -> None:
-            while (state["frontier"] < n_rounds
-                   and pub_done[state["frontier"]]):
-                state["frontier"] += 1
-            while (state["next_launch"] < n_rounds
-                   and gate_round(state["next_launch"]) < state["frontier"]):
+            while state["next_launch"] < n_rounds:
                 r = state["next_launch"]
+                need = min((r + 1) * R, per_producer) - W
+                if need > 0 and int(prefix.min()) < need:
+                    return
                 state["next_launch"] += 1
                 launch_pub(r)
+
+        combos_del_by_q = {qi: (lambda mem, cons, qi=qi:
+                                np.stack([c_bnode[cons],
+                                          np.full(cons.size, q_home[qi]),
+                                          c_node[cons]], axis=1))
+                           for qi in range(nq)}
+
+        def on_seen_del(mem, t_done, cons):
+            consume_t[mem] = t_done
+            if feedback:
+                launch_reply(mem, t_done, cons)
 
         def launch_pub(r: int) -> None:
             lo, hi = r * R, min((r + 1) * R, per_producer)
@@ -628,73 +976,126 @@ class VectorizedStreamSim:
             flat_pr = pr_idx[:, i_blk].ravel()
             flat_i = i_idx[:, i_blk].ravel()
             flat_q = msg_q[:, i_blk].ravel()
-            combos = np.stack([pr_node[flat_pr], pr_bnode[flat_pr],
-                               q_home[flat_q]], axis=1)
 
-            def part(members: np.ndarray, t_enq: np.ndarray) -> None:
+            def attempt(sel: np.ndarray, t0: np.ndarray) -> None:
+                combos = np.stack([pr_node[flat_pr[sel]],
+                                   pr_bnode[flat_pr[sel]],
+                                   q_home[flat_q[sel]]], axis=1)
+
+                def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
+                    land(sel[mb], t_enq)
+
+                self._push_transit(t0, size, "publish_path", combos,
+                                   on_part=part)
+
+            def land(sel: np.ndarray, t_enq: np.ndarray) -> None:
                 # messages enqueue (and confirm, and become deliverable)
                 # as they land — not when the whole round has finished
-                confirms[flat_pr[members], flat_i[members]] = t_enq + ctrl
-                gidx = (flat_pr[members] * per_producer
-                        + flat_i[members])
-                launch_del(gidx, flat_q[members], t_enq)
+                prs, iis, qs = flat_pr[sel], flat_i[sel], flat_q[sel]
+                for qi in np.unique(qs):
+                    m = np.nonzero(qs == qi)[0]
+                    q = work_q[int(qi)]
+                    acc, blocked_on = self._enqueue_batch([q], t_enq[m])
+                    rej = np.nonzero(~acc)[0]
+                    if rej.size:
+                        # reject-publish: producer re-publish backoff as a
+                        # cohort re-injection round
+                        self.rejected += rej.size
+                        attempt(sel[m[rej]],
+                                t_enq[m[rej]] + p.publish_retry_s)
+                    ok = np.nonzero(acc)[0]
+                    if ok.size == 0:
+                        continue
+                    if acc.all() and not any(blocked_on):
+                        # hot path (no reject, no credit event): bulk
+                        # confirms, one prefix advance
+                        confirms[prs[m], iis[m]] = t_enq[m] + ctrl
+                        self._deliver_queue(
+                            ("work", int(qi)), q_consumers[int(qi)],
+                            t_enq[m], prs[m] * per_producer + iis[m],
+                            combos_del_by_q[int(qi)], size,
+                            "delivery_path", consumer=True,
+                            recv=recv_req, on_seen=on_seen_del)
+                        mark_confirmed(prs[m], iis[m])
+                        continue
+                    now = []
+                    any_deferred = None
+                    for k in ok:
+                        mk = m[k]
+                        bq = blocked_on[k]
+                        if bq is None:
+                            confirms[prs[mk], iis[mk]] = t_enq[mk] + ctrl
+                            now.append(mk)
+                        else:
+                            # credit flow: withhold this confirm until the
+                            # pump drains the queue to flow_resume
+                            self.blocked += 1
+                            any_deferred = bq
 
-            def done(_t: np.ndarray) -> None:
-                pub_done[r] = True
-                advance_pubs()
+                            def setter(t_conf, pr_k=int(prs[mk]),
+                                       i_k=int(iis[mk])):
+                                confirms[pr_k, i_k] = t_conf
+                                mark_confirmed([pr_k], [i_k])
+                            bq["deferred"].append(setter)
+                    gidx = prs[m[ok]] * per_producer + iis[m[ok]]
+                    self._deliver_queue(
+                        ("work", int(qi)), q_consumers[int(qi)],
+                        t_enq[m[ok]], gidx, combos_del_by_q[int(qi)],
+                        size, "delivery_path", consumer=True,
+                        recv=recv_req, on_seen=on_seen_del)
+                    if now:
+                        nw = np.asarray(now, dtype=int)
+                        mark_confirmed(prs[nw], iis[nw])
+                    if any_deferred is not None:
+                        self._try_resume(any_deferred)
 
-            self._push_transit(s_blk.ravel(), size, "publish_path", combos,
-                               on_done=done, on_part=part)
-
-        def launch_del(gidx, qs, t_enq) -> None:
-            # members are global message indices (pr * per_producer + i)
-            for q in range(nq):
-                m = np.nonzero(qs == q)[0]
-                if m.size == 0:
-                    continue
-
-                def combos_fn(mem, cons, q=q):
-                    return np.stack([c_bnode[cons],
-                                     np.full(cons.size, q_home[q]),
-                                     c_node[cons]], axis=1)
-
-                def on_seen(mem, t_done, cons):
-                    consume_t[mem] = t_done
-                    if feedback:
-                        launch_reply(mem, t_done, cons)
-
-                self._deliver_queue(
-                    ("work", q), q_consumers[q], t_enq[m], gidx[m],
-                    combos_fn, size, "delivery_path", consumer=True,
-                    recv=recv_req, on_seen=on_seen)
+            attempt(np.arange(flat_pr.size), s_blk.ravel())
 
         def launch_reply(members, t_done, cons) -> None:
             # members are global message indices; producer = index // n
-            pr_m = members // per_producer
-            combos = np.stack([c_node[cons], c_bnode[cons],
-                               reply_home[pr_m]], axis=1)
+            def attempt_r(mem: np.ndarray, cns: np.ndarray,
+                          t0: np.ndarray) -> None:
+                pr_m = mem // per_producer
+                combos = np.stack([c_node[cns], c_bnode[cns],
+                                   reply_home[pr_m]], axis=1)
 
-            def part(sub: np.ndarray, t_renq: np.ndarray) -> None:
-                prs = pr_m[sub]
+                def part(sub: np.ndarray, t_renq: np.ndarray) -> None:
+                    land_r(mem[sub], cns[sub], t_renq)
+
+                self._push_transit(t0, reply_size, "reply_publish_path",
+                                   combos, on_part=part)
+
+            def land_r(mem: np.ndarray, cns: np.ndarray,
+                       t_renq: np.ndarray) -> None:
+                prs = mem // per_producer
                 for pr in np.unique(prs):
                     pos = np.nonzero(prs == pr)[0]
+                    q = self._queues[("reply", int(pr))]
+                    acc, _ = self._enqueue_batch([q], t_renq[pos])
+                    rej = pos[~acc]
+                    if rej.size:
+                        self.rejected += rej.size
+                        attempt_r(mem[rej], cns[rej],
+                                  t_renq[rej] + p.publish_retry_s)
+                    ok = pos[acc]
+                    if ok.size == 0:
+                        continue
 
-                    def combos_fn(mem, _cons, pr=pr):
+                    def combos_fn(sub_mem, _cons, pr=int(pr)):
                         return np.broadcast_to(
                             [reply_home[pr], pr_bnode[pr], pr_node[pr]],
-                            (mem.size, 3))
+                            (sub_mem.size, 3))
 
-                    def on_seen(mem, t_seen, _cons):
-                        rtts[mem] = t_seen - pub_start.ravel()[mem]
+                    def on_seen(sub_mem, t_seen, _cons):
+                        rtts[sub_mem] = t_seen - pub_start.ravel()[sub_mem]
 
                     self._deliver_queue(
-                        ("reply", int(pr)), [nC + int(pr)], t_renq[pos],
-                        members[sub[pos]], combos_fn, reply_size,
+                        ("reply", int(pr)), [nC + int(pr)], t_renq[ok],
+                        mem[ok], combos_fn, reply_size,
                         "reply_delivery_path", consumer=False,
                         recv=recv_rep, on_seen=on_seen)
 
-            self._push_transit(t_done, reply_size, "reply_publish_path",
-                               combos, on_part=part)
+            attempt_r(members, cons, t_done)
 
         advance_pubs()
         self._drain_all()
@@ -725,21 +1126,42 @@ class VectorizedStreamSim:
         reply_size = max(1, int(size * p.reply_factor))
         recv_rep = self._recv_latency(reply_size)
 
-        R = max(1, min(W, p.vec_round))
-        n_rounds = -(-per_producer // R)
-        pub_done = np.zeros(n_rounds, dtype=bool)
-        state = {"frontier": 0, "next_launch": 0}
+        # fanout targets: reject-publish is atomic across all of them, and
+        # the first flow-blocked target withholds the confirm (heap broker)
+        cap = (p.queue_max_bytes // size if p.queue_max_bytes else None)
+        rcap = (p.queue_max_bytes // reply_size if p.queue_max_bytes
+                else None)
+        bqs = [self._queue_state(("bq", c), [c], size,
+                                 credit=FLOW_CREDIT, cap_msgs=cap)
+               for c in range(nC)]
+        if gather:
+            self._queue_state(("gather",), [nC], reply_size, cap_msgs=rcap)
 
-        def gate_round(r: int) -> int:
-            return ((r + 1) * R - 1 - W) // R
+        R = max(1, min(W, self._round))
+        # overflow regime reachable on the fanout targets: see _run_work
+        if self.p.vec_round is None and (
+                (cap is not None and cap < per_producer)
+                or FLOW_CREDIT < self.publish_surplus * per_producer):
+            R = 1
+        n_rounds = -(-per_producer // R)
+        # resolved-confirm prefix of the single producer (see _run_work)
+        conf_ok = np.zeros(per_producer, dtype=bool)
+        state = {"next_launch": 0, "prefix": 0}
+
+        def mark_confirmed(i_arr) -> None:
+            conf_ok[i_arr] = True
+            j = state["prefix"]
+            while j < per_producer and conf_ok[j]:
+                j += 1
+            state["prefix"] = j
+            advance_pubs()
 
         def advance_pubs() -> None:
-            while (state["frontier"] < n_rounds
-                   and pub_done[state["frontier"]]):
-                state["frontier"] += 1
-            while (state["next_launch"] < n_rounds
-                   and gate_round(state["next_launch"]) < state["frontier"]):
+            while state["next_launch"] < n_rounds:
                 r = state["next_launch"]
+                need = min((r + 1) * R, per_producer) - W
+                if need > 0 and state["prefix"] < need:
+                    return
                 state["next_launch"] += 1
                 launch_pub(r)
 
@@ -751,19 +1173,53 @@ class VectorizedStreamSim:
             gate[m_g] = confirms[i_blk[m_g] - W]
             s_blk = gate + flush
             pub_start[i_blk] = s_blk
-            # a fanout publish transits once, to the exchange's home node 0
-            combos = np.broadcast_to([pnode, pbnode, 0], (i_blk.size, 3))
 
-            def part(members: np.ndarray, t_enq: np.ndarray) -> None:
-                confirms[i_blk[members]] = t_enq + ctrl
-                launch_del(i_blk[members], t_enq)
+            def attempt(sel: np.ndarray, t0: np.ndarray) -> None:
+                # a fanout publish transits once, to the exchange's home
+                combos = np.broadcast_to([pnode, pbnode, 0], (sel.size, 3))
 
-            def done(_t: np.ndarray) -> None:
-                pub_done[r] = True
-                advance_pubs()
+                def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
+                    land(sel[mb], t_enq)
 
-            self._push_transit(s_blk, size, "publish_path", combos,
-                               on_done=done, on_part=part)
+                self._push_transit(t0, size, "publish_path", combos,
+                                   on_part=part)
+
+            def land(sel: np.ndarray, t_enq: np.ndarray) -> None:
+                acc, blocked_on = self._enqueue_batch(bqs, t_enq)
+                rej = np.nonzero(~acc)[0]
+                if rej.size:
+                    self.rejected += rej.size
+                    attempt(sel[rej], t_enq[rej] + p.publish_retry_s)
+                ok = np.nonzero(acc)[0]
+                if ok.size == 0:
+                    return
+                if acc.all() and not any(blocked_on):
+                    confirms[i_blk[sel]] = t_enq + ctrl
+                    launch_del(i_blk[sel], t_enq)
+                    mark_confirmed(i_blk[sel])
+                    return
+                now = []
+                any_deferred = None
+                for k in ok:
+                    bq = blocked_on[k]
+                    if bq is None:
+                        confirms[i_blk[sel[k]]] = t_enq[k] + ctrl
+                        now.append(int(i_blk[sel[k]]))
+                    else:
+                        self.blocked += 1
+                        any_deferred = bq
+
+                        def setter(t_conf, i_k=int(i_blk[sel[k]])):
+                            confirms[i_k] = t_conf
+                            mark_confirmed([i_k])
+                        bq["deferred"].append(setter)
+                launch_del(i_blk[sel[ok]], t_enq[ok])
+                if now:
+                    mark_confirmed(np.asarray(now, dtype=int))
+                if any_deferred is not None:
+                    self._try_resume(any_deferred)
+
+            attempt(np.arange(i_blk.size), s_blk)
 
         def launch_del(i_part, t_enq) -> None:
             # replicate to every per-consumer queue; deliver each copy
@@ -787,10 +1243,27 @@ class VectorizedStreamSim:
 
         def launch_reply(members, t_done, c) -> None:
             # members are global copy indices (c * per_producer + i)
-            combos = np.broadcast_to(
-                [c_node[c], c_bnode[c], gather_home], (members.size, 3))
+            def attempt_g(mem: np.ndarray, t0: np.ndarray) -> None:
+                combos = np.broadcast_to(
+                    [c_node[c], c_bnode[c], gather_home], (mem.size, 3))
 
-            def on_enq(t_renq: np.ndarray) -> None:
+                def part(sub: np.ndarray, t_renq: np.ndarray) -> None:
+                    land_g(mem[sub], t_renq)
+
+                self._push_transit(t0, reply_size, "reply_publish_path",
+                                   combos, on_part=part)
+
+            def land_g(mem: np.ndarray, t_renq: np.ndarray) -> None:
+                q = self._queues[("gather",)]
+                acc, _ = self._enqueue_batch([q], t_renq)
+                rej = np.nonzero(~acc)[0]
+                if rej.size:
+                    self.rejected += rej.size
+                    attempt_g(mem[rej], t_renq[rej] + p.publish_retry_s)
+                ok = np.nonzero(acc)[0]
+                if ok.size == 0:
+                    return
+
                 def combos_fn(sub_members, _cons):
                     return np.broadcast_to(
                         [gather_home, pbnode, pnode], (sub_members.size, 3))
@@ -800,12 +1273,11 @@ class VectorizedStreamSim:
                         t_seen - pub_start[sub_members % per_producer])
 
                 self._deliver_queue(
-                    ("gather",), [nC], t_renq, members, combos_fn,
+                    ("gather",), [nC], t_renq[ok], mem[ok], combos_fn,
                     reply_size, "reply_delivery_path", consumer=False,
                     recv=recv_rep, on_seen=on_seen)
 
-            self._push_transit(t_done, reply_size, "reply_publish_path",
-                               combos, on_done=on_enq)
+            attempt_g(members, t_done)
 
         advance_pubs()
         self._drain_all()
@@ -825,7 +1297,9 @@ class VectorizedStreamSim:
             consume_times=consume_t,
             rtts=r,
             publish_starts=np.sort(pub_start),
-            rejected_publishes=0, redelivered=0,
+            rejected_publishes=self.rejected,
+            blocked_confirms=self.blocked,
+            redelivered=0,
             sim_time=top, n_events=self.n_events)
 
 

@@ -1,0 +1,59 @@
+"""Benchmark cache keying: engine/params-aware keys, loud failure on
+legacy-format entries (the bug where an engine switch silently served
+stale heap-engine numbers from results/bench_cache.json)."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import (  # noqa: E402
+    Cache, LegacyCacheError, cache_key, params_fingerprint, plain_key,
+    resolve_engine)
+from repro.core.simulator import SimParams  # noqa: E402
+
+
+def test_cache_key_includes_engine_and_fingerprint():
+    kh = cache_key("work_sharing|dts|dstream|8|4096|1", engine="heap")
+    kv = cache_key("work_sharing|dts|dstream|8|4096|1", engine="vectorized")
+    assert kh != kv
+    assert "engine=heap" in kh and "engine=vectorized" in kv
+    assert kh.startswith("v2|") and kv.startswith("v2|")
+
+
+def test_fingerprint_tracks_param_overrides_and_defaults():
+    base = params_fingerprint("vectorized")
+    assert params_fingerprint("vectorized", prefetch=16) != base
+    assert params_fingerprint("vectorized", jitter=0.0) != base
+    # stable for identical input
+    assert params_fingerprint("vectorized") == base
+
+
+def test_resolve_engine_defaults_to_simparams_default():
+    assert resolve_engine(None) == SimParams().engine == "vectorized"
+    assert resolve_engine("heap") == "heap"
+
+
+def test_legacy_cache_fails_loudly(tmp_path):
+    p = tmp_path / "bench_cache.json"
+    p.write_text(json.dumps({
+        "work_sharing|dts|dstream|8|4096|1|": {"throughput": 1.0}}))
+    with pytest.raises(LegacyCacheError, match="legacy-format"):
+        Cache(str(p))
+
+
+def test_versioned_cache_roundtrip_and_key_guard(tmp_path):
+    p = tmp_path / "bench_cache.json"
+    c = Cache(str(p))
+    k = cache_key("cell", engine="vectorized")
+    assert c.get_or(k, lambda: {"v": 1}) == {"v": 1}
+    # served from disk on reload, no recompute
+    c2 = Cache(str(p))
+    assert c2.get_or(k, lambda: {"v": 2}) == {"v": 1}
+    # unversioned keys are rejected at write time too
+    with pytest.raises(LegacyCacheError, match="version prefix"):
+        c2.get_or("raw-key", lambda: {})
+    assert plain_key("kernels/micro").startswith("v2|")
