@@ -1,0 +1,117 @@
+"""Campaign layer benchmarks: batched grids + multi-tenant MSS curve.
+
+Two cell families:
+
+* ``campaign/batched_vs_serial`` — the same (pattern x arch x consumers
+  x 3 seeds) grid through ``patterns.sweep`` (the serial cell-at-a-time
+  loop) and through ``campaign.run_campaign`` (seed-stacked batched
+  runs + process fan-out).  'derived' carries the wall-clock speedup —
+  the PR's >=2x acceptance gate — and the worst averaged-summary
+  deviation between the two paths.
+* ``campaign/multi_tenant/*`` — the paper's §6 MSS multi-user
+  scalability claim made quantitative: N independent feedback workflows
+  (1 producer + 1 consumer each) share one managed broker, N sweeping
+  1 -> 64.  'derived' reports per-tenant throughput, RTT, the Jain
+  fairness index and degradation vs the single-tenant baseline.
+
+``CAMPAIGN_BENCH_SMOKE=1`` shrinks both families for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Cache, cache_key, resolve_engine
+from repro.core.campaign import CampaignSpec, run_campaign
+from repro.core.patterns import multi_tenant, sweep
+
+SMOKE = os.environ.get("CAMPAIGN_BENCH_SMOKE") == "1"
+
+if SMOKE:
+    GRID = dict(patterns=("feedback",), architectures=("mss",),
+                consumers=(4,), n_runs=3, total_messages=512)
+    TENANTS = (1, 4, 16)
+    TENANT_MSGS = 64
+    TENANT_RUNS = 1
+else:
+    GRID = dict(patterns=("feedback",), architectures=("dts", "mss"),
+                consumers=(4, 8), n_runs=3, total_messages=2048)
+    TENANTS = (1, 2, 4, 8, 16, 32, 64)
+    TENANT_MSGS = 256
+    TENANT_RUNS = 3
+
+
+def _speedup_cell() -> dict:
+    # pin the --engine-resolved engine into the cells so the runs match
+    # the engine name the cache key carries (seed stacking only applies
+    # on the vectorized engine; heap cells fall back per-cell)
+    eng = resolve_engine(None)
+    spec = CampaignSpec(name="bench-grid", workloads=("dstream",),
+                        params={"engine": eng}, **GRID)
+    t0 = time.time()
+    res = run_campaign(spec, cache=None)     # cold: measure execution
+    wall_campaign = time.time() - t0
+    t0 = time.time()
+    serial = sweep(GRID["patterns"][0], GRID["architectures"], "dstream",
+                   consumers=GRID["consumers"], n_runs=GRID["n_runs"],
+                   total_messages=GRID["total_messages"], engine=eng)
+    wall_serial = time.time() - t0
+    by_cell = {(s.arch, s.n_consumers): s for s in res.averaged}
+    dev = 0.0
+    for s in serial:
+        c = by_cell[(s.arch, s.n_consumers)]
+        dev = max(dev, abs(c.throughput_msgs_s - s.throughput_msgs_s)
+                  / s.throughput_msgs_s)
+        if s.median_rtt_s == s.median_rtt_s:   # not NaN
+            dev = max(dev, abs(c.median_rtt_s - s.median_rtt_s)
+                      / s.median_rtt_s)
+    return {"wall_campaign": wall_campaign, "wall_serial": wall_serial,
+            "speedup": wall_serial / wall_campaign,
+            "n_cells": len(res.cells), "max_summary_dev": dev}
+
+
+def run(cache: Cache):
+    rows = []
+
+    grid_tag = (f"{'x'.join(GRID['architectures'])}|"
+                f"c{'-'.join(map(str, GRID['consumers']))}|"
+                f"m{GRID['total_messages']}|r{GRID['n_runs']}")
+    c = cache.get_or(cache_key(f"campaign|batched_vs_serial|{grid_tag}"),
+                     _speedup_cell)
+    rows.append((f"campaign/batched_vs_serial/{grid_tag}",
+                 c["wall_campaign"] * 1e6 / max(1, c["n_cells"]),
+                 f"speedup={c['speedup']:.2f}x (serial "
+                 f"{c['wall_serial']:.1f}s campaign "
+                 f"{c['wall_campaign']:.1f}s, {c['n_cells']} cells) "
+                 f"max_dev={100 * c['max_summary_dev']:.2f}%"))
+
+    def tenant_cells() -> dict:
+        pts = multi_tenant("mss", TENANTS,
+                           messages_per_tenant=TENANT_MSGS,
+                           n_runs=TENANT_RUNS,
+                           engine=resolve_engine(None))
+        return {str(p.tenants): {
+            "thr": p.tenant_throughput_msgs_s,
+            "rtt": p.tenant_median_rtt_s,
+            "fairness": p.fairness,
+            "degradation": p.degradation,
+            "feasible": p.feasible} for p in pts}
+
+    key = cache_key(
+        f"campaign|multi_tenant|mss|{'-'.join(map(str, TENANTS))}"
+        f"|m{TENANT_MSGS}|r{TENANT_RUNS}")
+    cells = cache.get_or(key, tenant_cells)
+    for t in TENANTS:
+        p = cells[str(t)]
+        if not p["feasible"]:
+            rows.append((f"campaign/multi_tenant/mss/t{t}", float("nan"),
+                         "INFEASIBLE"))
+            continue
+        rows.append((f"campaign/multi_tenant/mss/t{t}",
+                     1e6 / p["thr"] if p["thr"] else float("nan"),
+                     f"thr/tenant={p['thr']:.0f}msg/s "
+                     f"rtt={p['rtt'] * 1e3:.0f}ms "
+                     f"fairness={p['fairness']:.3f} "
+                     f"degradation={p['degradation']:.2f}"))
+    return rows

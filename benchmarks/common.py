@@ -16,11 +16,12 @@ loudly — see :class:`Cache`.
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 from typing import Callable, Optional
 
+from repro.core.campaign import CACHE_KEY_VERSION
+from repro.core.campaign import params_fingerprint as _params_fingerprint
 from repro.core.metrics import rtt_fraction_under, summarize
 from repro.core.patterns import run_pattern
 from repro.core.simulator import SimParams
@@ -28,9 +29,10 @@ from repro.core.simulator import SimParams
 CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                           "bench_cache.json")
 
-#: every cache key must start with this; anything else is a legacy key
-#: from before engine/params-aware keying and must not be served
-CACHE_KEY_VERSION = "v2"
+# CACHE_KEY_VERSION (re-exported above from repro.core.campaign, the
+# single definition): every cache key must start with it; anything else
+# is a legacy key from before engine/params-aware keying and must not
+# be served.
 
 #: process-wide engine override (benchmarks/run.py --engine); None means
 #: "whatever SimParams defaults to"
@@ -50,12 +52,12 @@ def resolve_engine(engine: Optional[str] = None) -> str:
 def params_fingerprint(engine: str, **params) -> str:
     """Short stable hash of the fully-resolved SimParams for a cell.
 
-    Built from the constructed dataclass (defaults + overrides), so any
-    change to simulator defaults — not just the overrides a bench passes
-    — invalidates the cache entry."""
-    p = SimParams(engine=engine, **params)
-    blob = repr(sorted(p.__dict__.items()))
-    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+    Built from the constructed dataclass (defaults + overrides) with
+    the one shared fingerprint construction
+    (``repro.core.campaign.params_fingerprint``), so any change to
+    simulator defaults — not just the overrides a bench passes —
+    invalidates the cache entry, for bench and campaign cells alike."""
+    return _params_fingerprint(SimParams(engine=engine, **params))
 
 
 def cache_key(name: str, engine: Optional[str] = None, **params) -> str:

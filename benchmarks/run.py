@@ -8,15 +8,31 @@ keys carry the engine name, so the two never collide).
 Simulator cells are disk-cached (results/bench_cache.json); delete the
 cache to force re-measurement.  A cache file with legacy-format keys
 (pre engine/params-aware keying) aborts the run loudly instead of
-serving stale numbers."""
+serving stale numbers.
+
+Campaign mode executes a whole sweep grid as batched work (seed-stacked
+engine runs + process fan-out; see ``src/repro/core/campaign.py``) and
+writes the per-cell + averaged summaries to ``results/``::
+
+    python -m benchmarks.run --campaign demo
+    python -m benchmarks.run --campaign my_grid.json --workers 2 \\
+        --campaign-out results/campaign_mygrid.json
+
+The JSON spec mirrors ``CampaignSpec`` (axes, n_runs, params,
+cell_params); ``demo`` runs a small built-in paper-style grid.
+Campaign cells share the bench cache, so re-running a finished (or
+interrupted) campaign is incremental."""
 
 import argparse
+import json
+import os
 import sys
 import time
 
 from benchmarks import (
-    bench_engine_scaling, bench_fig4_work_sharing, bench_fig5_rtt_cdf,
-    bench_fig6_feedback_rtt, bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
+    bench_campaign, bench_engine_scaling, bench_fig4_work_sharing,
+    bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
+    bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
     bench_highspeed_projection, bench_kernels, bench_overflow_regime,
     bench_payload_sweep, bench_roofline, bench_table1_workloads)
 from benchmarks import common
@@ -35,23 +51,82 @@ MODULES = [
     ("roofline", bench_roofline),
     ("engine_scaling", bench_engine_scaling),
     ("overflow_regime", bench_overflow_regime),
+    ("campaign", bench_campaign),
 ]
+
+#: --campaign demo: a small paper-style grid (Fig 6 slice + tenants)
+DEMO_CAMPAIGN = {
+    "name": "demo",
+    "patterns": ["feedback"],
+    "architectures": ["dts", "mss"],
+    "workloads": ["dstream"],
+    "consumers": [4, 8],
+    "n_runs": 3,
+    "total_messages": 2048,
+}
+
+
+def run_campaign_cli(args, cache: Cache) -> None:
+    from repro.core.campaign import CampaignSpec, run_campaign
+    if args.campaign == "demo":
+        spec = CampaignSpec.from_json(json.dumps(DEMO_CAMPAIGN))
+    else:
+        with open(args.campaign) as f:
+            spec = CampaignSpec.from_json(f.read())
+    if args.engine is not None:
+        # the --engine escape hatch applies to campaign cells too
+        # (explicit per-spec params win)
+        spec.params.setdefault("engine", args.engine)
+    res = run_campaign(spec, cache=cache, workers=args.workers,
+                       progress=lambda m: print(f"# {m}", file=sys.stderr))
+    out = args.campaign_out or os.path.join(
+        os.path.dirname(__file__), "..", "results",
+        f"campaign_{spec.name}.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as f:
+        f.write(res.to_json())
+    cache.save()
+    print(f"# campaign {spec.name!r}: {len(res.cells)} cells "
+          f"({res.n_cached} cached) in {res.wall_s:.1f}s -> {out}",
+          file=sys.stderr)
+    print("name,us_per_call,derived")
+    for s in res.averaged:
+        us = (1e6 / s.throughput_msgs_s if s.feasible
+              and s.throughput_msgs_s else float("nan"))
+        print(f"campaign/{spec.name}/{s.pattern}/{s.arch}/{s.workload}/"
+              f"c{s.n_consumers},{us:.1f},"
+              f"thr={s.throughput_msgs_s:.0f}msg/s n_runs={s.n_runs}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
-                    help="run a single module (e.g. fig4, overflow_regime)")
+                    help="run a single module (e.g. fig4, campaign)")
     ap.add_argument("--engine", choices=("heap", "vectorized"), default=None,
                     help="StreamSim backend for simulator cells "
                          "(default: the SimParams default, vectorized)")
+    ap.add_argument("--campaign", default=None, metavar="SPEC",
+                    help="execute a campaign grid: path to a "
+                         "CampaignSpec JSON file, or 'demo'")
+    ap.add_argument("--campaign-out", default=None, metavar="PATH",
+                    help="where to write the campaign results JSON "
+                         "(default results/campaign_<name>.json)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="campaign process fan-out (default: one per "
+                         "CPU, capped by the group count)")
     args = ap.parse_args()
+    if args.campaign and args.only:
+        ap.error("--campaign replaces the bench modules; drop the "
+                 f"positional module argument {args.only!r}")
     common.DEFAULT_ENGINE = args.engine
     try:
         cache = Cache()
     except LegacyCacheError as e:
         print(f"FATAL: {e}", file=sys.stderr)
         raise SystemExit(2)
+    if args.campaign:
+        run_campaign_cli(args, cache)
+        return
     print("name,us_per_call,derived")
     for name, mod in MODULES:
         if args.only and args.only != name:

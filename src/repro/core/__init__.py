@@ -7,31 +7,38 @@ from repro.core.architectures import (
     ALL_ARCHITECTURES, Architecture, Calibration, DirectStreaming,
     ManagedServiceStreaming, ProxiedStreaming, make_architecture)
 from repro.core.broker import BrokerCluster, ClassicQueue, Message
+from repro.core.campaign import (
+    CampaignResult, CampaignSpec, CellSpec, cell_key, run_campaign)
 from repro.core.ds2hpc import ClusterInventory, RabbitMQRelease
 from repro.core.metrics import (
-    overhead_table, overhead_vs_baseline, rtt_cdf, summarize,
+    jain_fairness, overhead_table, overhead_vs_baseline, rtt_cdf,
+    summarize, tenant_median_rtts, tenant_throughputs,
     throughput_msgs_per_s)
 from repro.core.patterns import (
-    CONSUMER_SWEEP, overflow_stress, run_pattern, sweep)
+    CONSUMER_SWEEP, TENANT_SWEEP, TenantPoint, multi_tenant,
+    overflow_stress, run_pattern, sweep)
 from repro.core.s3m import ResourceSettings, S3MService
 from repro.core.scistream import S2CS, S2UC, establish_prs_session
 from repro.core.simulator import (
     ENGINES, Engine, ExperimentSpec, RunResult, SimConfig, SimParams,
     StreamSim, get_engine, run_experiment)
-from repro.core.vectorized import VectorizedStreamSim
+from repro.core.vectorized import VectorizedStreamSim, run_many
 from repro.core.workloads import (
     DSTREAM, GENERIC, LSTREAM, WORKLOADS, Workload, get_workload)
 
 __all__ = [
     "ALL_ARCHITECTURES", "Architecture", "BrokerCluster", "CONSUMER_SWEEP",
-    "Calibration", "ClassicQueue", "ClusterInventory", "DSTREAM",
-    "DirectStreaming", "ENGINES", "Engine", "ExperimentSpec", "GENERIC",
-    "LSTREAM", "ManagedServiceStreaming", "Message", "ProxiedStreaming",
+    "Calibration", "CampaignResult", "CampaignSpec", "CellSpec",
+    "ClassicQueue", "ClusterInventory", "DSTREAM", "DirectStreaming",
+    "ENGINES", "Engine", "ExperimentSpec", "GENERIC", "LSTREAM",
+    "ManagedServiceStreaming", "Message", "ProxiedStreaming",
     "RabbitMQRelease", "ResourceSettings", "RunResult", "S2CS", "S2UC",
-    "S3MService", "SimConfig", "SimParams", "StreamSim",
-    "VectorizedStreamSim", "WORKLOADS", "Workload",
-    "establish_prs_session", "get_engine", "get_workload",
-    "make_architecture", "overflow_stress", "overhead_table",
-    "overhead_vs_baseline", "rtt_cdf", "run_experiment", "run_pattern",
-    "summarize", "sweep", "throughput_msgs_per_s",
+    "S3MService", "SimConfig", "SimParams", "StreamSim", "TENANT_SWEEP",
+    "TenantPoint", "VectorizedStreamSim", "WORKLOADS", "Workload",
+    "cell_key", "establish_prs_session", "get_engine", "get_workload",
+    "jain_fairness", "make_architecture", "multi_tenant",
+    "overflow_stress", "overhead_table", "overhead_vs_baseline",
+    "rtt_cdf", "run_campaign", "run_experiment", "run_many",
+    "run_pattern", "summarize", "sweep", "tenant_median_rtts",
+    "tenant_throughputs", "throughput_msgs_per_s",
 ]

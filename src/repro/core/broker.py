@@ -232,6 +232,12 @@ class BrokerCluster:
         self.confirms_enabled = True
 
     # -- topology --------------------------------------------------------------
+    @staticmethod
+    def vhost_name(vhost: Optional[str], name: str) -> str:
+        """Fully-qualified queue name: ``<vhost>/<name>`` (RabbitMQ-style
+        virtual-host namespacing), or ``name`` for the default vhost."""
+        return f"{vhost}/{name}" if vhost else name
+
     def declare_queue(
         self,
         name: str,
@@ -239,7 +245,14 @@ class BrokerCluster:
         control: bool = False,
         max_bytes: Optional[int] = None,
         home_node: Optional[int] = None,
+        vhost: Optional[str] = None,
     ) -> ClassicQueue:
+        """Declare (or return) a classic queue.  ``vhost`` namespaces the
+        queue per tenant: the same base name declared in two vhosts
+        yields two independent queues (multi-tenant MSS scenario); the
+        returned queue's ``name`` is the fully-qualified one clients
+        must publish/consume with."""
+        name = self.vhost_name(vhost, name)
         if name in self.queues:
             return self.queues[name]
         if max_bytes is None:
@@ -400,6 +413,11 @@ class BrokerCluster:
         self.queues[name].home_node = new_node
 
     # -- introspection ----------------------------------------------------------
+    def vhost_queues(self, vhost: str) -> list[str]:
+        """Names of the queues living in ``vhost``."""
+        prefix = f"{vhost}/"
+        return [n for n in self.queues if n.startswith(prefix)]
+
     def total_ready(self) -> int:
         return sum(len(q) for q in self.queues.values())
 

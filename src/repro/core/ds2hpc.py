@@ -1,15 +1,34 @@
-"""DS2HPC / ACE infrastructure model (paper §3.1, §4.1).
+"""DS2HPC / ACE infrastructure model (paper §3.1, §4.1 — the testbed
+every simulated architecture is deployed onto).
 
-Physical inventory used by the simulator to build contention resources, and
-deployment descriptors mirroring the paper's OpenShift/Helm mechanics. The
-numbers come straight from the paper:
+What each paper section contributes here
+----------------------------------------
 
-* DSNs (Data Streaming Nodes) on the Olivine OpenShift cluster: 2x 32-core
-  2.70 GHz AMD EPYC 9334, 512 GiB RAM, 100 Gbps-capable NICs *currently
-  limited to ~1 Gbps effective* (§4.1, §6 — SRIOV/RHCOS issues).
-* Client nodes from Andes: 2x 16-core 3.0 GHz AMD EPYC 7302, 256 GiB RAM;
-  16 producer nodes + 16 consumer nodes + 1 coordinator (§5.2).
-* NodePort range 30000-32767; AMQP 30672 / AMQPS 30671 (§4.3).
+* **§3.1 (Data Streaming to HPC, DS2HPC)** — the notion of dedicated
+  *Data Streaming Nodes* (DSNs) at the facility edge, bridging external
+  producers and internal HPC consumers.  :class:`ClusterInventory` is
+  that testbed: how many DSNs and client nodes exist, and the effective
+  link rates between them.  It is the single source of truth the
+  architecture models (:mod:`repro.core.architectures`) turn into
+  shared contention resources (``dsn_in:*``, ``plink:*``, ...), so a
+  what-if like the §6 100 Gbps projection is one call
+  (:meth:`ClusterInventory.highspeed`).
+* **§4.1 (deployment environment)** — the concrete hardware:
+  :data:`DSN_SPEC` (Olivine OpenShift nodes: 2x 32-core 2.70 GHz AMD
+  EPYC 9334, 512 GiB RAM, 100 Gbps-capable NICs *currently limited to
+  ~1 Gbps effective* — the SRIOV/RHCOS issue §6 revisits) and
+  :data:`ANDES_SPEC` (client nodes: 2x 16-core 3.0 GHz EPYC 7302,
+  256 GiB; 16 producer + 16 consumer nodes + 1 coordinator, §5.2).
+* **§4.3 (DTS mechanics)** — NodePort allocation
+  (:class:`NodePortService`, range 30000-32767; AMQP 30672 / AMQPS
+  30671) and the Bitnami Helm release the paper installs
+  (:class:`RabbitMQRelease`: 3 replicas with pod anti-affinity across
+  DSNs, 12 CPUs + 32 GiB per pod, TLS, 512 MiB max message).
+
+Consumed by: ``architectures.py`` (resource construction + node
+placement maps), both StreamSim engines (producer/consumer -> node
+mapping), ``benchmarks/bench_highspeed_projection.py`` and the engine
+scaling benches (the upgraded-fabric what-if).
 """
 
 from __future__ import annotations

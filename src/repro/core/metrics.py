@@ -25,8 +25,11 @@ class Summary:
     p95_rtt_s: float = float("nan")
     min_rtt_s: float = float("nan")
     goodput_gbps: float = float("nan")
-    rejected: int = 0
-    blocked: int = 0
+    #: reject-publish / credit-flow-block counts.  Float because multi-
+    #: run cells report the *mean* over seeds — flooring small nonzero
+    #: means to int silently hid rare-overflow cells (0.33 -> 0).
+    rejected: float = 0
+    blocked: float = 0
     n_messages: int = 0
     #: how many (feasible) runs a multi-seed mean covers; 1 for a single
     #: run, set by patterns.average_summaries
@@ -83,6 +86,49 @@ def rtt_fraction_under(result: RunResult, threshold_s: float) -> float:
     if result.rtts.size == 0:
         return float("nan")
     return float((result.rtts <= threshold_s).mean())
+
+
+def jain_fairness(values: Sequence[float]) -> float:
+    """Jain's fairness index over per-tenant (or per-flow) rates:
+    ``(sum x)^2 / (n * sum x^2)``.  1.0 = perfectly even shares, ``1/n``
+    = one tenant starves all others.  NaN when no finite positive data."""
+    v = np.asarray(values, dtype=float)
+    v = v[np.isfinite(v)]
+    if v.size == 0 or not np.any(v):
+        return float("nan")
+    return float(v.sum() ** 2 / (v.size * (v ** 2).sum()))
+
+
+def tenant_throughputs(result: RunResult) -> np.ndarray:
+    """Per-tenant consumed-message rate (msgs/s) over the run's active
+    span, from the result's producer-attribution arrays.  Shape
+    ``(spec.tenants,)``."""
+    T = max(1, result.spec.tenants)
+    ts = result.consume_times
+    if ts.size < 2 or result.consume_producers.size != ts.size:
+        return np.full(T, float("nan"))
+    span = float(ts.max() - ts.min())
+    if span <= 0:
+        return np.full(T, float("nan"))
+    tenant = result.tenant_of_producer(result.consume_producers)
+    counts = np.bincount(tenant, minlength=T)[:T]
+    return counts / span
+
+
+def tenant_median_rtts(result: RunResult) -> np.ndarray:
+    """Per-tenant median round-trip time (s); NaN for tenants with no
+    RTT samples.  Shape ``(spec.tenants,)``."""
+    T = max(1, result.spec.tenants)
+    out = np.full(T, float("nan"))
+    if result.rtts.size == 0 or \
+            result.rtt_producers.size != result.rtts.size:
+        return out
+    tenant = result.tenant_of_producer(result.rtt_producers)
+    for t in range(T):
+        sel = result.rtts[tenant == t]
+        if sel.size:
+            out[t] = float(np.median(sel))
+    return out
 
 
 def overhead_vs_baseline(value: float, baseline: float,

@@ -1,22 +1,45 @@
-"""S3M (Secure Scientific Service Mesh) managed-provisioning model (§3.1, §4.5).
+"""S3M (Secure Scientific Service Mesh) managed-provisioning model
+(paper §3.1, §4.5 — the facility service behind the MSS architecture).
 
-S3M fronts the MSS architecture: users present project-scoped, time-limited
-tokens; the Streaming API validates them against project allocations and
-policy rules, provisions the requested streaming service onto DSNs, and
-returns an FQDN-based AMQPS URL (web-style access on port 443).
+S3M fronts MSS: users present project-scoped, time-limited tokens; the
+Streaming API validates them against project allocations and policy
+rules, provisions the requested streaming service onto DSNs, and
+returns an FQDN-based AMQPS URL — web-style access on port 443, the
+property that makes MSS the most deployable of the three architectures
+(outbound 443 is all a user needs).
 
-This module models the pieces the paper exercises:
+What each paper section contributes here
+----------------------------------------
 
-* token issuance + validation (project scope, expiry, permissions);
-* ``provision_cluster`` mirroring the paper's REST call::
+* **§3.1 (S3M overview)** — the service-mesh framing: per-project
+  allocations (:meth:`S3MService.register_project`), Istio-style policy
+  checks on every call (:meth:`S3MService._authorize` — unknown/forged
+  token, expiry, permission scope), and the **Compute API** hook
+  (:meth:`S3MService.submit_compute`) for dynamic compute orchestration
+  — the piece the training integration uses to trigger an HPC job as
+  part of a streaming workflow.
+* **§4.5 (MSS deployment)** — the REST provisioning call the paper
+  issues, mirrored by :meth:`S3MService.provision_cluster`::
 
       POST /olcf/v1alpha/streaming/rabbitmq/provision_cluster
       {"kind": "general", "name": "rabbitmq",
        "resourceSettings": {"cpus": 12, "ram-gbs": 32, "nodes": 3,
                             "max-msg-size": 536870912}}
 
-* the Compute API hook (dynamic compute orchestration) that the training
-  integration uses to trigger an HPC job as part of a streaming workflow.
+  :class:`ResourceSettings` enforces the allocation-policy bounds, and
+  the returned :class:`ManagedCluster` carries the user-facing FQDN
+  (``rabbitmq-<project>-<n>.apps.olivine.ccs.ornl.gov``) plus the DSN
+  placement.
+* **§6 (multi-user scalability)** — per-project cluster quotas model
+  the managed service's tenancy limits.  The *quantitative* side of the
+  multi-user claim lives in :func:`repro.core.patterns.multi_tenant`,
+  which sweeps N tenant workflows against one provisioned deployment
+  (per-tenant vhost queues mirror S3M's per-project isolation).
+
+Consumed by: :class:`repro.core.architectures.ManagedServiceStreaming`
+(an optional provisioned :class:`ManagedCluster` describes what the MSS
+hop graph fronts), the steering/serving examples, and
+``tests/test_core_system.py`` (auth + quota failure modes).
 """
 
 from __future__ import annotations

@@ -1,24 +1,42 @@
-"""SciStream control plane (paper §3.2, §4.4).
+"""SciStream control plane (paper §3.2, §4.4 — the machinery behind the
+PRS architecture).
 
-Faithful model of the three SciStream components and the session handshake
-the paper drives through ``s2uc inbound-request`` / ``s2uc outbound-request``:
+What each paper section contributes here
+----------------------------------------
 
-* **S2UC** (user client) — brokers requests, gathers short-lived credentials;
-* **S2CS** (control server, one per gateway node) — allocates local resources
-  (ports 5000 control + 5100-5110 streaming in the paper's pods), launches
-  data servers;
-* **S2DS** (data server) — the on-demand proxy bridging internal network and
-  WAN; authenticates external peers by proxy certificate, internal peers by
-  source address.
+* **§3.2 (SciStream)** — the three components and their trust model:
 
-The handshake (paper §3.2): S2UC contacts producer-side and consumer-side
-S2CS to negotiate parallel channels + bandwidth; on acceptance, a control
-protocol launches S2DS instances, assigns ports, builds a connection map and
-signals the applications. Data then flows producer → local proxy → remote
-proxy → consumer.
+  - **S2UC** (user client, :class:`S2UC`) — brokers requests, gathers
+    short-lived credentials, runs the inbound/outbound request
+    sequence;
+  - **S2CS** (control server, :class:`S2CS`, one per gateway node) —
+    allocates local resources (port 5000 control + 5100-5110 streaming
+    in the paper's pods) and launches data servers;
+  - **S2DS** (data server, :class:`S2DS`) — the on-demand proxy
+    bridging internal network and WAN; authenticates external peers by
+    proxy certificate (:class:`ProxyCertificate`), internal peers by
+    source address.
 
-The resulting :class:`StreamingSession` is what
-:class:`repro.core.architectures.ProxiedStreaming` deploys over.
+  The §3.2 handshake: S2UC contacts producer-side and consumer-side
+  S2CS to negotiate parallel channels + bandwidth; on acceptance, S2DS
+  instances launch, ports are assigned, a connection map is built
+  (:attr:`StreamingSession.connection_map`) and the applications are
+  signaled.  Data then flows producer → local proxy → overlay tunnel →
+  remote proxy → consumer (:attr:`StreamingSession.hops`).
+
+* **§4.4 (PRS deployment)** — the concrete CLI sequence the paper runs
+  (``s2uc inbound-request`` returning ``(PROXY port, UID)``, then
+  ``s2uc outbound-request``), reproduced end-to-end by
+  :func:`establish_prs_session` on the paper's topology (producer-side
+  S2CS at 198.51.100.1, consumer-side at 198.51.100.0), including the
+  failure modes the control protocol guards (certificate mismatch,
+  unknown UID, ``num_conn`` mismatch, port-range exhaustion).
+
+Consumed by: :class:`repro.core.architectures.ProxiedStreaming` — a
+negotiated :class:`StreamingSession` names the tunnel realization
+(Stunnel's serialized single TLS flow with its hard 16-connection cap,
+vs HAProxy's load-balanced pipe) whose contention resources the PRS hop
+graph charges; exercised by ``tests/test_core_system.py``.
 """
 
 from __future__ import annotations

@@ -137,6 +137,36 @@ class ExperimentSpec:
     n_consumers: int
     total_messages: int
     params: SimParams = dataclasses.field(default_factory=SimParams)
+    #: multi-tenant mode (paper §6's MSS multi-user claim): partition the
+    #: producers/consumers into this many independent workflows sharing
+    #: one broker deployment.  Tenant of producer/consumer ``k`` is
+    #: ``k // (count // tenants)`` (contiguous blocks).
+    tenants: int = 1
+    #: how tenant workflows share the broker: ``"shared"`` — all tenants
+    #: publish into the same work queues (messages mix; any consumer may
+    #: process any tenant's message); ``"vhost"`` — per-tenant queues in
+    #: per-tenant vhosts (RabbitMQ-style namespacing; only the tenant's
+    #: own consumers see its messages).  Work-sharing/feedback only.
+    tenant_isolation: str = "shared"
+
+    def __post_init__(self) -> None:
+        if self.tenants < 1:
+            raise ValueError(f"tenants must be >= 1, got {self.tenants}")
+        if self.tenant_isolation not in ("shared", "vhost"):
+            raise ValueError(
+                f"tenant_isolation must be 'shared' or 'vhost', got "
+                f"{self.tenant_isolation!r}")
+        if self.tenants > 1:
+            if self.pattern not in ("work_sharing", "feedback"):
+                raise ValueError(
+                    "multi-tenant mode supports the work_sharing/feedback "
+                    f"patterns, not {self.pattern!r}")
+            if (self.n_producers % self.tenants
+                    or self.n_consumers % self.tenants):
+                raise ValueError(
+                    f"tenants={self.tenants} must evenly divide producers "
+                    f"({self.n_producers}) and consumers "
+                    f"({self.n_consumers})")
 
 
 @dataclasses.dataclass
@@ -154,10 +184,22 @@ class RunResult:
     redelivered: int = 0
     sim_time: float = 0.0
     n_events: int = 0
+    #: producer index of each ``consume_times`` / ``rtts`` entry (same
+    #: order), for per-producer / per-tenant attribution.  Empty when an
+    #: engine predates the attribution contract or the run is infeasible.
+    consume_producers: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
+    rtt_producers: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
 
     @property
     def n_consumed(self) -> int:
         return int(self.consume_times.size)
+
+    def tenant_of_producer(self, producer_idx: np.ndarray) -> np.ndarray:
+        """Map producer indices to tenant indices (contiguous blocks)."""
+        per = max(1, self.spec.n_producers // max(1, self.spec.tenants))
+        return np.asarray(producer_idx, dtype=np.int64) // per
 
 
 class InfeasibleConfiguration(RuntimeError):
@@ -260,6 +302,9 @@ class StreamSim:
         self.consume_times: list[float] = []
         self.rtts: list[float] = []
         self.publish_starts: list[float] = []
+        self.consume_producers: list[int] = []
+        self.rtt_producers: list[int] = []
+        self._reply_q: dict[int, str] = {}
         self.rejected = 0
         self.blocked = 0
         # flow state
@@ -316,27 +361,54 @@ class StreamSim:
         pat = spec.pattern
         qcap = p.queue_max_bytes          # None = broker RAM-budget default
         if pat in ("work_sharing", "feedback"):
-            nq = min(p.n_work_queues, nC)
-            self._work_queues = [f"work:{i}" for i in range(nq)]
-            for q in self._work_queues:
-                self.broker.declare_queue(q, max_bytes=qcap)
-            for c in range(nC):
-                q = self._work_queues[c % nq]
-                self.broker.register_consumer(
-                    f"c{c}", q, prefetch=p.prefetch,
-                    connected_node=(c + 1) % self.inv.n_dsn)
+            T = spec.tenants
+            vhosted = T > 1 and spec.tenant_isolation == "vhost"
+            if vhosted:
+                # per-tenant vhost queues: tenant t's producers publish
+                # only into t's queues, consumed only by t's consumers
+                ppt, cpt = nP // T, nC // T
+                nq_t = min(p.n_work_queues, cpt)
+                self._work_queues = []
+                for t in range(T):
+                    for i in range(nq_t):
+                        q = self.broker.declare_queue(
+                            f"work:{i}", vhost=f"t{t}", max_bytes=qcap)
+                        self._work_queues.append(q.name)
+                for c in range(nC):
+                    t, cl = c // cpt, c % cpt
+                    qn = self._work_queues[t * nq_t + cl % nq_t]
+                    self.broker.register_consumer(
+                        f"c{c}", qn, prefetch=p.prefetch,
+                        connected_node=(c + 1) % self.inv.n_dsn)
+            else:
+                nq = min(p.n_work_queues, nC)
+                self._work_queues = [f"work:{i}" for i in range(nq)]
+                for q in self._work_queues:
+                    self.broker.declare_queue(q, max_bytes=qcap)
+                for c in range(nC):
+                    q = self._work_queues[c % nq]
+                    self.broker.register_consumer(
+                        f"c{c}", q, prefetch=p.prefetch,
+                        connected_node=(c + 1) % self.inv.n_dsn)
             if pat == "feedback":
                 self._replies_expected = self._expected_consumed
                 for pr in range(nP):
-                    rq = f"reply:{pr}"
-                    self.broker.declare_queue(rq, control=False,
-                                              max_bytes=qcap)
+                    vh = f"t{pr // (nP // T)}" if vhosted else None
+                    rq = self.broker.declare_queue(
+                        f"reply:{pr}", vhost=vh, control=False,
+                        max_bytes=qcap)
+                    self._reply_q[pr] = rq.name
                     self.broker.register_consumer(
-                        f"p{pr}", rq, prefetch=p.prefetch,
+                        f"p{pr}", rq.name, prefetch=p.prefetch,
                         connected_node=pr % self.inv.n_dsn)
             for pr in range(nP):
+                if vhosted:
+                    t = pr // ppt
+                    qs = self._work_queues[t * nq_t:(t + 1) * nq_t]
+                else:
+                    qs = self._work_queues
                 self._start_producer(pr, per_producer,
-                                     queue_of=self._ws_queue_of(pr))
+                                     queue_of=self._ws_queue_of(pr, qs))
         elif pat in ("broadcast", "broadcast_gather"):
             assert nP == 1, "broadcast patterns use a single producer"
             self._expected_consumed = per_producer * nC
@@ -360,8 +432,7 @@ class StreamSim:
         else:
             raise ValueError(f"unknown pattern {pat!r}")
 
-    def _ws_queue_of(self, pr: int) -> Callable[[int], str]:
-        qs = self._work_queues
+    def _ws_queue_of(self, pr: int, qs: list) -> Callable[[int], str]:
         return lambda i: qs[(pr + i) % len(qs)]
 
     # -- producers ---------------------------------------------------------------
@@ -385,7 +456,7 @@ class StreamSim:
                 rk = queue_of(i)
                 msg = Message(routing_key=rk, size=size,
                               producer_id=f"p{pr}",
-                              reply_to=(f"reply:{pr}"
+                              reply_to=(self._reply_q.get(pr, f"reply:{pr}")
                                         if spec.pattern == "feedback" else
                                         ("gather" if spec.pattern ==
                                          "broadcast_gather" else None)))
@@ -484,6 +555,9 @@ class StreamSim:
 
         def consumed(t_done: float) -> None:
             self.consume_times.append(t_done)
+            pid = d.message.producer_id
+            self.consume_producers.append(
+                int(pid[1:]) if pid and pid[1:].isdigit() else 0)
             self._consumed += 1
             self._ack(d, t_done)
             if d.message.reply_to is not None:
@@ -550,6 +624,7 @@ class StreamSim:
             req_t = d.message.headers.get("req_publish")
             if req_t is not None:
                 self.rtts.append(t_seen - req_t)
+                self.rtt_producers.append(pidx)
             self._replies_received += 1
             self._ack(d, t_seen)
             self._check_done()
@@ -581,7 +656,10 @@ class StreamSim:
             rejected_publishes=self.rejected,
             blocked_confirms=self.blocked,
             redelivered=redeliv,
-            sim_time=self.now, n_events=self.n_events)
+            sim_time=self.now, n_events=self.n_events,
+            consume_producers=np.asarray(self.consume_producers,
+                                         dtype=np.int64),
+            rtt_producers=np.asarray(self.rtt_producers, dtype=np.int64))
 
 
 ENGINES["heap"] = StreamSim

@@ -91,7 +91,8 @@ from repro.core.architectures import (
 from repro.core.broker import ClassicQueue
 from repro.core.ds2hpc import ClusterInventory
 from repro.core.simulator import (
-    ENGINES, ExperimentSpec, RunResult, check_feasibility)
+    ENGINES, ExperimentSpec, InfeasibleConfiguration, RunResult,
+    check_feasibility)
 
 #: RabbitMQ credit_flow_default_credit, shared with the heap broker model
 FLOW_CREDIT = ClassicQueue.FLOW_CREDIT
@@ -108,24 +109,42 @@ SATURATION_MAX_CLIENTS = 64
 # ---------------------------------------------------------------------------
 
 
-def _fifo_scan(a: np.ndarray, h: np.ndarray, carry: float) -> np.ndarray:
+def _fifo_scan(a: np.ndarray, h: np.ndarray, carry) -> np.ndarray:
     """End times for FIFO service: e_j = max(a_j, e_{j-1}) + h_j, with the
-    server busy until ``carry`` before the first arrival."""
+    server busy until ``carry`` before the first arrival.
+
+    Dimension-generic: arrays may carry a trailing *lane* axis (stacked
+    multi-seed execution — see :meth:`VectorizedStreamSim.run_stacked`);
+    the recurrence always runs along axis 0, independently per lane."""
     a = np.maximum(a, carry)
-    H = np.cumsum(h)
-    return H + np.maximum.accumulate(a - (H - h))
+    H = np.cumsum(h, axis=0)
+    return H + np.maximum.accumulate(a - (H - h), axis=0)
+
+
+def _lane0(a: np.ndarray) -> np.ndarray:
+    """The scheduling view of a possibly lane-stacked time array: lane 0
+    (the pilot lane) drives every ordering/branching decision."""
+    return a if a.ndim == 1 else a[:, 0]
 
 
 class _VecResource:
-    """Busy-interval state for one shared resource, served in batches."""
+    """Busy-interval state for one shared resource, served in batches.
+
+    With ``lanes > 1`` the resource holds one carry per lane and serves
+    ``(n, lanes)`` time arrays — same FIFO arithmetic per lane, with the
+    pilot lane's arrival order deciding the (shared) service order."""
 
     __slots__ = ("spec", "_free_pipe", "_free_pool")
 
-    def __init__(self, spec: ResourceSpec):
+    def __init__(self, spec: ResourceSpec, lanes: int = 1):
         self.spec = spec
         self._free_pipe = 0.0
-        self._free_pool = (np.zeros(max(1, spec.servers))
-                           if spec.kind == "pool" else None)
+        if spec.kind == "pool":
+            k = max(1, spec.servers)
+            self._free_pool = (np.zeros(k) if lanes == 1
+                               else np.zeros((k, lanes)))
+        else:
+            self._free_pool = None
 
     def hold_times(self, nbytes: np.ndarray) -> np.ndarray:
         s = self.spec
@@ -136,19 +155,27 @@ class _VecResource:
     def serve(self, t_arr: np.ndarray, nbytes: np.ndarray,
               jit: np.ndarray) -> np.ndarray:
         """FIFO-serve a batch (any order); returns per-message end times."""
-        hold = self.hold_times(nbytes) * (1.0 + jit)
-        order = np.argsort(t_arr, kind="stable")
+        ht = self.hold_times(nbytes)
+        if jit.ndim > 1 and np.ndim(ht) == 1:
+            ht = ht[:, None]
+        hold = ht * (1.0 + jit)
+        order = np.argsort(_lane0(t_arr), kind="stable")
         a, h = t_arr[order], hold[order]
         end_sorted = np.empty_like(a)
         if self.spec.kind == "pipe":
             end_sorted = _fifo_scan(a, h, self._free_pipe)
-            self._free_pipe = float(end_sorted[-1])
+            self._free_pipe = (float(end_sorted[-1]) if a.ndim == 1
+                               else end_sorted[-1].copy())
         else:
             # k-server pool: k interleaved chains; earliest-free server
             # takes the next arrival (exact for near-uniform hold times)
-            carry = np.sort(self._free_pool)
-            k = carry.size
-            n = a.size
+            if self._free_pool.ndim == 1:
+                carry = np.sort(self._free_pool)
+            else:
+                carry = self._free_pool[
+                    np.argsort(self._free_pool[:, 0], kind="stable")]
+            k = carry.shape[0]
+            n = a.shape[0]
             for c in range(min(k, n)):
                 end_sorted[c::k] = _fifo_scan(a[c::k], h[c::k], carry[c])
                 carry[c] = end_sorted[c + ((n - 1 - c) // k) * k]
@@ -201,17 +228,36 @@ def _align_paths(paths: dict) -> tuple[dict, int]:
 class VectorizedStreamSim:
     """Batched engine; same constructor/run contract as ``StreamSim``."""
 
+    #: bound on the memoized (flow, combos) -> resolved-paths cache
+    COMBO_CACHE_MAX = 8192
+
     def __init__(self, spec: ExperimentSpec,
                  inventory: Optional[ClusterInventory] = None,
-                 arch: Optional[Architecture] = None):
+                 arch: Optional[Architecture] = None,
+                 stack_seeds: Optional[list] = None):
+        """``stack_seeds``: run this many seed-lanes of the same cell in
+        one batched event loop (cohort stacking — see
+        :meth:`run_stacked`); ``None``/single-seed is the exact solo
+        engine.  ``stack_seeds[0]`` becomes the *pilot* lane whose clock
+        drives all scheduling decisions; its results are bit-identical
+        to a solo run with that seed."""
         self.spec = spec
         self.p = spec.params
         self.inv = inventory or ClusterInventory()
         self.arch = arch or make_architecture(spec.arch, self.inv)
         self.arch.configure(spec.n_producers, spec.n_consumers)
         check_feasibility(self.arch, spec)
-        self.rng = np.random.default_rng(self.p.seed)
-        self.resources = {k: _VecResource(s)
+        self.stack_seeds = (list(stack_seeds) if stack_seeds is not None
+                            else [self.p.seed])
+        self._lanes = len(self.stack_seeds)
+        if self._lanes < 1:
+            raise ValueError("stack_seeds must name at least one seed")
+        if self.stack_seeds[0] != self.p.seed:
+            raise ValueError("stack_seeds[0] (the pilot lane) must equal "
+                             "params.seed")
+        self._rngs = [np.random.default_rng(s) for s in self.stack_seeds]
+        self.rng = self._rngs[0]
+        self.resources = {k: _VecResource(s, self._lanes)
                           for k, s in self.arch.resources.items()}
         self._proc_s = (self.p.consumer_proc_s
                         if self.p.consumer_proc_s is not None
@@ -221,6 +267,7 @@ class VectorizedStreamSim:
         self.blocked = 0
         self._path_cache: dict = {}
         self._align_cache: dict = {}
+        self._combo_cache: dict = {}
         self._channels: dict = {}
         self._queues: dict = {}
         self._chan_queue: dict = {}
@@ -255,6 +302,64 @@ class VectorizedStreamSim:
                 if self.p.vec_horizon_s is None:
                     self._slack *= 0.25
 
+    # -- work-pattern topology (shared vs per-tenant vhost queues) -------------
+    def _work_topology(self):
+        """Queue topology of the work-sharing/feedback patterns.
+
+        Returns ``(nq, q_consumers, prod_queues, q_publishers)``:
+        ``q_consumers[qi]`` — consumer indices attached to queue ``qi``;
+        ``prod_queues[pr]`` — the queues producer ``pr`` round-robins
+        over; ``q_publishers[qi]`` — how many producers publish to
+        ``qi`` (its credit-flow threshold multiplier).  Queue indices
+        follow the heap engine's declare order, so home nodes line up.
+        With ``tenants > 1`` and vhost isolation, tenant ``t`` owns
+        queues ``[t*nq_t, (t+1)*nq_t)`` and only its own producers/
+        consumers touch them."""
+        spec, p = self.spec, self.p
+        nP, nC = spec.n_producers, spec.n_consumers
+        if spec.tenants > 1 and spec.tenant_isolation == "vhost":
+            T = spec.tenants
+            ppt, cpt = nP // T, nC // T
+            nq_t = min(p.n_work_queues, cpt)
+            nq = T * nq_t
+            q_consumers = [
+                t * cpt + np.flatnonzero(np.arange(cpt) % nq_t == qi)
+                for t in range(T) for qi in range(nq_t)]
+            prod_queues = [
+                [(pr // ppt) * nq_t + qi for qi in range(nq_t)]
+                for pr in range(nP)]
+            q_publishers = [ppt] * nq
+        else:
+            nq = min(p.n_work_queues, nC)
+            q_consumers = [np.flatnonzero(np.arange(nC) % nq == qi)
+                           for qi in range(nq)]
+            prod_queues = [list(range(nq))] * nP
+            q_publishers = [nP] * nq
+        return nq, q_consumers, prod_queues, q_publishers
+
+    def flow_events_possible(self) -> bool:
+        """Static reachability test for broker flow-control events
+        (credit-flow confirm withholding / reject-publish overflow):
+        True when producers can pile a queue's backlog past its credit
+        threshold, or a byte cap sits below the per-queue volume.  Used
+        by the auto ``vec_round`` heuristic (drop to per-message rounds
+        at the blocking boundary) and by :func:`run_many` to refuse
+        stacking — stacked lanes share the pilot's admission decisions,
+        so flow-control counters would not be lane-resolved."""
+        spec, p = self.spec, self.p
+        size = spec.workload.payload_bytes
+        cap = (p.queue_max_bytes // size) if p.queue_max_bytes else None
+        per_producer = spec.total_messages // max(1, spec.n_producers)
+        if spec.pattern in ("work_sharing", "feedback"):
+            nq, _, _, q_pubs = self._work_topology()
+            per_q = per_producer * spec.n_producers / nq
+            credit = FLOW_CREDIT * min(q_pubs)
+        else:
+            per_q = per_producer
+            credit = FLOW_CREDIT
+        return ((cap is not None and cap < per_q)
+                or credit < self.publish_surplus * per_q)
+
     # -- static bottleneck analysis --------------------------------------------
     def _cost_model(self) -> tuple[float, float]:
         """Returns ``(dsn_utilization, publish_surplus)``.
@@ -281,34 +386,40 @@ class VectorizedStreamSim:
         legs: list[tuple[str, tuple, float, int]] = []
         pat = spec.pattern
         if pat in ("work_sharing", "feedback"):
-            nq = min(p.n_work_queues, nC)
+            nq, q_consumers, prod_queues, _ = self._work_topology()
             q_home = [q % inv.n_dsn for q in range(nq)]
             reply_home = [(nq + pr) % inv.n_dsn for pr in range(nP)]
             for pr in range(nP):
-                for qi in range(nq):
+                for qi in prod_queues[pr]:
                     legs.append(("publish_path",
                                  (pr % inv.n_producer_nodes, pr % inv.n_dsn,
-                                  q_home[qi]), 1.0 / (nP * nq), size))
-            members = [[c for c in range(nC) if c % nq == qi]
-                       for qi in range(nq)]
+                                  q_home[qi]),
+                                 1.0 / (nP * len(prod_queues[pr])), size))
             for qi in range(nq):
-                for c in members[qi]:
+                members = q_consumers[qi]
+                for c in members:
                     legs.append(("delivery_path",
-                                 ((c + 1) % inv.n_dsn, q_home[qi],
-                                  c % inv.n_consumer_nodes),
-                                 1.0 / (nq * len(members[qi])), size))
+                                 ((int(c) + 1) % inv.n_dsn, q_home[qi],
+                                  int(c) % inv.n_consumer_nodes),
+                                 1.0 / (nq * len(members)), size))
             if pat == "feedback":
                 # collapse the (consumer x producer) cross product over
-                # the <= n_dsn distinct reply homes
-                home_w: dict[int, float] = {}
-                for h in reply_home:
-                    home_w[h] = home_w.get(h, 0.0) + 1.0 / nP
-                for c in range(nC):
-                    for h, w in home_w.items():
-                        legs.append(("reply_publish_path",
-                                     (c % inv.n_consumer_nodes,
-                                      (c + 1) % inv.n_dsn, h),
-                                     w / nC, rsize))
+                # the <= n_dsn distinct reply homes, tenant by tenant (a
+                # vhosted consumer replies only to its own producers)
+                T = (spec.tenants if spec.tenant_isolation == "vhost"
+                     else 1)
+                ppt, cpt = nP // T, nC // T
+                for t in range(T):
+                    home_w: dict[int, float] = {}
+                    for pr in range(t * ppt, (t + 1) * ppt):
+                        h = reply_home[pr]
+                        home_w[h] = home_w.get(h, 0.0) + 1.0 / ppt
+                    for c in range(t * cpt, (t + 1) * cpt):
+                        for h, w in home_w.items():
+                            legs.append(("reply_publish_path",
+                                         (c % inv.n_consumer_nodes,
+                                          (c + 1) % inv.n_dsn, h),
+                                         w / nC, rsize))
                 for pr in range(nP):
                     legs.append(("reply_delivery_path",
                                  (reply_home[pr], pr % inv.n_dsn,
@@ -359,8 +470,15 @@ class VectorizedStreamSim:
 
     # -- helpers ---------------------------------------------------------------
     def _jit(self, n: int) -> np.ndarray:
+        """Service-time jitter draws: ``(n,)`` solo, ``(n, lanes)`` when
+        stacked — each lane consumes its own generator in the (shared)
+        event order, so the pilot lane's stream matches a solo run."""
         j = self.p.jitter
-        return self.rng.uniform(-j, j, n) if j else np.zeros(n)
+        if self._lanes == 1:
+            return self.rng.uniform(-j, j, n) if j else np.zeros(n)
+        if not j:
+            return np.zeros((n, self._lanes))
+        return np.stack([g.uniform(-j, j, n) for g in self._rngs], axis=1)
 
     def _recv_latency(self, size: int) -> float:
         return self.arch.recv_latency_s(size)
@@ -368,11 +486,13 @@ class VectorizedStreamSim:
     def _chan(self, cid: int) -> dict:
         """Broker-channel state: per-delivery seen/ack times (the ack
         clock), the ack-multiple coverage cursor, and the consumer's
-        serial-processing carry."""
+        serial-processing carry.  The clock arrays carry a trailing lane
+        axis in stacked mode."""
         ch = self._channels.get(cid)
         if ch is None:
-            ch = {"assigned": 0, "acked": 0, "seen": np.zeros(0),
-                  "ack_time": np.zeros(0), "free": 0.0,
+            shape = (0,) if self._lanes == 1 else (0, self._lanes)
+            ch = {"assigned": 0, "acked": 0, "seen": np.zeros(shape),
+                  "ack_time": np.zeros(shape), "free": 0.0,
                   "since": 0, "last_tag": 0}
             self._channels[cid] = ch
         return ch
@@ -381,15 +501,24 @@ class VectorizedStreamSim:
     def _chan_grow(ch: dict, extra: int) -> None:
         """Amortized growth of the per-delivery bookkeeping arrays."""
         need = ch["assigned"] + extra
-        if ch["seen"].size < need:
-            cap = max(need, 2 * ch["seen"].size, 64)
+        if ch["seen"].shape[0] < need:
+            cap = max(need, 2 * ch["seen"].shape[0], 64)
             for f in ("seen", "ack_time"):
-                a = np.full(cap, np.nan)
-                a[:ch[f].size] = ch[f]
+                a = np.full((cap,) + ch[f].shape[1:], np.nan)
+                a[:ch[f].shape[0]] = ch[f]
                 ch[f] = a
 
     def _resolve_paths(self, flow: str, combos: np.ndarray):
-        """Per-combo aligned paths + member indices for one cohort leg."""
+        """Per-combo aligned paths + member indices for one cohort leg.
+
+        The full resolution is a pure function of ``(flow, combos)``, so
+        repeated cohort shapes (the same consumer rotation recurring
+        across pump chunks, or the same cohort in another stacked lane)
+        hit ``_combo_cache`` and skip the row-dedup entirely."""
+        ckey = (flow, combos.shape[0], combos.tobytes())
+        hit = self._combo_cache.get(ckey)
+        if hit is not None:
+            return hit
         ctor = getattr(self.arch, flow)
         uniq, inv = np.unique(combos, axis=0, return_inverse=True)
         inv = inv.ravel()
@@ -404,6 +533,9 @@ class VectorizedStreamSim:
             self._align_cache[ak] = _align_paths(raw)
         aligned, n_slots = self._align_cache[ak]
         idx_by = {u: np.nonzero(inv == u)[0] for u in aligned}
+        if len(self._combo_cache) >= self.COMBO_CACHE_MAX:
+            self._combo_cache.clear()     # crude but bounded
+        self._combo_cache[ckey] = (aligned, idx_by, n_slots)
         return aligned, idx_by, n_slots
 
     # -- queue backlog accounting (credit flow + overflow) ---------------------
@@ -432,11 +564,17 @@ class VectorizedStreamSim:
         return q
 
     def _pop_departs(self, q: dict, t: float) -> None:
-        """Advance the depart cursor: count releases that left by ``t``."""
+        """Advance the depart cursor: count releases that left by ``t``
+        (pilot-lane clock in stacked mode)."""
         h = q["depart_heap"]
-        while h and h[0] <= t:
-            q["last_pop_t"] = heapq.heappop(h)
-            q["departed"] += 1
+        if self._lanes == 1:
+            while h and h[0] <= t:
+                q["last_pop_t"] = heapq.heappop(h)
+                q["departed"] += 1
+        else:
+            while h and h[0][0] <= t:
+                q["last_pop_t"] = heapq.heappop(h)[2]
+                q["departed"] += 1
 
     def _record_departs(self, q: dict, departs: np.ndarray) -> None:
         """Register released deliveries' depart times; resolves any
@@ -444,9 +582,14 @@ class VectorizedStreamSim:
         if not q["track"]:
             return
         h = q["depart_heap"]
-        for d in departs:
-            heapq.heappush(h, float(d))
-        q["released"] += departs.size
+        if self._lanes == 1:
+            for d in departs:
+                heapq.heappush(h, float(d))
+        else:
+            # keyed by the pilot lane; per-lane depart vectors ride along
+            for d in departs:
+                heapq.heappush(h, (float(d[0]), next(self._seq), d))
+        q["released"] += departs.shape[0]
         if q["deferred"]:
             self._try_resume(q)
 
@@ -460,7 +603,8 @@ class VectorizedStreamSim:
         if q["released"] < target and not force:
             return False
         while q["departed"] < target and q["depart_heap"]:
-            q["last_pop_t"] = heapq.heappop(q["depart_heap"])
+            popped = heapq.heappop(q["depart_heap"])
+            q["last_pop_t"] = popped if self._lanes == 1 else popped[2]
             q["departed"] += 1
         t_resume = q["last_pop_t"] + self.arch.control_latency_s()
         resolvers, q["deferred"] = q["deferred"], []
@@ -478,12 +622,12 @@ class VectorizedStreamSim:
         Fast path: when even a zero-drain upper bound on every target's
         backlog stays below both the byte cap and the credit threshold,
         the whole cohort is admitted without per-message accounting."""
-        n = t_enq.size
+        n = t_enq.shape[0]
         none_blocked = [None] * n
         tracked = [q for q in qs if q["track"]]
         if not tracked:
             return np.ones(n, dtype=bool), none_blocked
-        t_min = float(t_enq.min())
+        t_min = float(_lane0(t_enq).min())
         fast = True
         for q in tracked:
             self._pop_departs(q, t_min)
@@ -500,8 +644,8 @@ class VectorizedStreamSim:
         # the heap engine's per-message offer()/flow_blocked sequence
         accept = np.zeros(n, dtype=bool)
         blocked_on = none_blocked
-        for k in np.argsort(t_enq, kind="stable"):
-            t = float(t_enq[k])
+        for k in np.argsort(_lane0(t_enq), kind="stable"):
+            t = float(_lane0(t_enq)[k])
             full = False
             for q in tracked:
                 self._pop_departs(q, t)
@@ -536,35 +680,33 @@ class VectorizedStreamSim:
         clocks) must advance as individual messages land."""
         aligned, idx_by, n_slots = self._resolve_paths(flow, combos)
         t0 = np.asarray(t0, dtype=float)
-        n = t0.size
+        n = t0.shape[0]
         inv = np.empty(n, dtype=int)
         for u, idx in idx_by.items():
             inv[idx] = u
-        cohort = {"out": np.empty(n), "remaining": n, "on_done": on_done,
-                  "on_part": on_part, "aligned": aligned, "size": size}
+        cohort = {"out": np.empty(t0.shape), "remaining": n,
+                  "on_done": on_done, "on_part": on_part,
+                  "aligned": aligned, "size": size, "flow": flow}
         batch = {"t": t0.copy(), "members": np.arange(n), "inv": inv,
                  "slot": 0, "n_slots": n_slots, "cohort": cohort}
         self._push(batch)
 
     def _push(self, batch: dict) -> None:
         heapq.heappush(self._heap,
-                       (float(batch["t"].min()), next(self._seq), batch))
+                       (float(_lane0(batch["t"]).min()),
+                        next(self._seq), batch))
 
-    def _serve_slot(self, batch: dict) -> None:
-        """Serve one hop for the head of one cohort batch.
-
-        Only members whose current time is at or before the next event's
-        key are served — the tail is split back into the heap — so every
-        resource sees its customers in near-global arrival order even when
-        cohort spans overlap.  Members at the same hop hitting the same
-        resource instance (across path variants) are merged into one FIFO
-        batch."""
+    def _split_horizon(self, batch: dict) -> dict:
+        """Split off the members past the event horizon (next event's key
+        + slack) back into the heap; returns the head sub-batch.  This is
+        what keeps every resource seeing its customers in near-global
+        arrival order even when cohort spans overlap."""
         if self._heap:
             horizon = self._heap[0][0] + self._slack
-            head = batch["t"] <= horizon
+            head = _lane0(batch["t"]) <= horizon
             if not head.all():
                 if not head.any():
-                    head[np.argmin(batch["t"])] = True
+                    head[np.argmin(_lane0(batch["t"]))] = True
                 tail = {"t": batch["t"][~head],
                         "members": batch["members"][~head],
                         "inv": batch["inv"][~head],
@@ -578,13 +720,24 @@ class VectorizedStreamSim:
                          "slot": batch["slot"],
                          "n_slots": batch["n_slots"],
                          "cohort": batch["cohort"]}
+        return batch
+
+    def _prepare_slot(self, batch: dict) -> list:
+        """Resolve one hop for a cohort batch into servable parts.
+
+        Applies latency-only elements in place and returns
+        ``[(resource_key, idx, nbytes, latency, jitter), ...]`` — members
+        at the same hop hitting the same resource instance (across path
+        variants) merged into one FIFO part, with the per-part jitter
+        already drawn (in deterministic part order, so a stacked multi-
+        lane run consumes each lane's RNG exactly like a solo run)."""
         cohort = batch["cohort"]
         t, s = batch["t"], batch["slot"]
         aligned = cohort["aligned"]
         size = cohort["size"]
         inv = batch["inv"]
         if len(aligned) == 1:
-            groups = [(0, np.arange(t.size))]
+            groups = [(0, np.arange(t.shape[0]))]
         else:
             order = np.argsort(inv, kind="stable")
             uniq, starts = np.unique(inv[order], return_index=True)
@@ -600,21 +753,29 @@ class VectorizedStreamSim:
                 t[idx] += el.latency_s
                 continue
             by_instance.setdefault(el.resource, []).append((idx, el))
-        for key, parts in by_instance.items():
-            if len(parts) == 1:
-                idx, el = parts[0]
+        parts = []
+        for key, ps in by_instance.items():
+            if len(ps) == 1:
+                idx, el = ps[0]
                 nbytes = size * el.byte_factor + el.extra_bytes
                 lat = el.latency_s
             else:
-                idx = np.concatenate([p[0] for p in parts])
+                idx = np.concatenate([p[0] for p in ps])
                 nbytes = np.concatenate([
                     np.full(p[0].size, size * p[1].byte_factor
-                            + p[1].extra_bytes) for p in parts])
+                            + p[1].extra_bytes) for p in ps])
                 lat = np.concatenate([
-                    np.full(p[0].size, p[1].latency_s) for p in parts])
-            t[idx] = (self.resources[key].serve(
-                t[idx], nbytes, self._jit(idx.size)) + lat)
-            self.n_events += idx.size
+                    np.full(p[0].size, p[1].latency_s) for p in ps])
+                if self._lanes > 1:
+                    lat = lat[:, None]
+            parts.append((key, idx, nbytes, lat, self._jit(idx.size)))
+        return parts
+
+    def _finish_slot(self, batch: dict) -> None:
+        """Advance a served batch: requeue the next hop, or complete the
+        cohort (fire ``on_part``/``on_done``)."""
+        cohort = batch["cohort"]
+        t = batch["t"]
         batch["slot"] += 1
         if batch["slot"] < batch["n_slots"]:
             self._push(batch)
@@ -622,17 +783,35 @@ class VectorizedStreamSim:
             if cohort["on_part"] is not None:
                 cohort["on_part"](batch["members"], t)
             cohort["out"][batch["members"]] = t
-            cohort["remaining"] -= t.size
+            cohort["remaining"] -= t.shape[0]
             if cohort["remaining"] == 0 and cohort["on_done"] is not None:
                 cohort["on_done"](cohort["out"])
 
+    def _serve_slot(self, batch: dict) -> None:
+        """Serve one hop for the head of one cohort batch."""
+        batch = self._split_horizon(batch)
+        for key, idx, nbytes, lat, jit in self._prepare_slot(batch):
+            batch["t"][idx] = (self.resources[key].serve(
+                batch["t"][idx], nbytes, jit) + lat)
+            self.n_events += idx.size
+        self._finish_slot(batch)
+
+    def _pop_batch(self) -> Optional[dict]:
+        """Pop the next cohort batch, honoring the same safety caps the
+        heap engine enforces; None when drained (or capped out)."""
+        if not self._heap:
+            return None
+        key, _, batch = heapq.heappop(self._heap)
+        if (self.n_events > self.p.max_events
+                or key > self.p.max_sim_time):
+            self._heap.clear()
+            return None
+        return batch
+
     def _drain(self) -> None:
-        while self._heap:
-            key, _, batch = heapq.heappop(self._heap)
-            # honor the same safety caps the heap engine enforces
-            if (self.n_events > self.p.max_events
-                    or key > self.p.max_sim_time):
-                self._heap.clear()
+        while True:
+            batch = self._pop_batch()
+            if batch is None:
                 break
             self._serve_slot(batch)
 
@@ -645,32 +824,38 @@ class VectorizedStreamSim:
                 any_resolved = True
         return any_resolved
 
+    def _tail_step(self) -> bool:
+        """One end-of-drain recovery step, called with the heap empty:
+        force-flush unflushed batch acks that hold back window-waiting
+        deliveries (the heap engine's expected-consumed flush), then
+        force-resume deferred confirms.  True when new events appeared."""
+        flushed = []
+        for c, ch in self._channels.items():
+            if ch["last_tag"] > ch["acked"]:
+                j = np.arange(ch["acked"], ch["last_tag"])
+                if not np.isfinite(ch["seen"][j]).all():
+                    continue
+                ch["ack_time"][j] = (ch["seen"][j]
+                                     + self.arch.control_latency_s())
+                ch["acked"] = ch["last_tag"]
+                ch["since"] = 0
+                if c in self._chan_queue:
+                    flushed.append(self._chan_queue[c])
+        if flushed:
+            self._pump_queues(flushed)
+            if self._heap:
+                return True
+        if self._force_resume() and self._heap:
+            return True
+        return False
+
     def _drain_all(self) -> None:
         """Drain the event heap; when only unflushed batch acks hold back
         window-waiting deliveries (the tail of a run), force-flush them —
         the heap engine's expected-consumed flush — and keep draining."""
         while True:
             self._drain()
-            flushed = []
-            for c, ch in self._channels.items():
-                if ch["last_tag"] > ch["acked"]:
-                    j = np.arange(ch["acked"], ch["last_tag"])
-                    if not np.isfinite(ch["seen"][j]).all():
-                        continue
-                    ch["ack_time"][j] = (ch["seen"][j]
-                                         + self.arch.control_latency_s())
-                    ch["acked"] = ch["last_tag"]
-                    ch["since"] = 0
-                    if c in self._chan_queue:
-                        flushed.append(self._chan_queue[c])
-            if not flushed:
-                if self._force_resume() and self._heap:
-                    continue
-                return
-            self._pump_queues(flushed)
-            if not self._heap:
-                if self._force_resume() and self._heap:
-                    continue
+            if not self._tail_step():
                 return
 
     # -- prefetch-windowed delivery (the batched broker pump) ------------------
@@ -694,7 +879,7 @@ class VectorizedStreamSim:
         cohort = {"combos_fn": combos_fn, "size": size, "flow": flow,
                   "consumer": consumer, "recv": recv, "on_seen": on_seen}
         q = self._queue_state(qkey, consumers, size)
-        o = np.argsort(t_ready, kind="stable")
+        o = np.argsort(_lane0(t_ready), kind="stable")
         q["pending"].append({"cohort": cohort, "idx": member_idx[o],
                              "t": t_ready[o], "pos": 0})
         self._pump_queues([qkey])
@@ -723,13 +908,13 @@ class VectorizedStreamSim:
                     t_sl, m_sl = seg["t"][sl], seg["idx"][sl]
                     cons = np.array(ids)[np.arange(n_rem) % k]
                     j_all = np.empty(n_rem, dtype=int)
-                    depart = np.empty(n_rem)
+                    depart = np.empty(t_sl.shape)
                     for r, c in enumerate(ids):
                         pos = np.arange(r, n_rem, k)
                         ch = self._chan(c)
                         self._chan_grow(ch, pos.size)
                         j = ch["assigned"] + np.arange(pos.size)
-                        gate = np.full(pos.size, -np.inf)
+                        gate = np.full(t_sl[pos].shape, -np.inf)
                         m_g = j >= P
                         gate[m_g] = ch["ack_time"][j[m_g] - P]
                         j_all[pos] = j
@@ -756,27 +941,32 @@ class VectorizedStreamSim:
                 chunk = max(1, self.p.ack_batch)
                 chans = [self._chan(c) for c in ids]
                 # next-assignment window gate per consumer (NaN = the ack
-                # that would re-open it hasn't been computed yet)
-                g = np.empty(len(ids))
+                # that would re-open it hasn't been computed yet); in
+                # stacked mode one gate vector per lane, decisions on the
+                # pilot lane's column
+                gshape = ((len(ids),) if self._lanes == 1
+                          else (len(ids), self._lanes))
+                g = np.empty(gshape)
                 for x, ch in enumerate(chans):
                     j = ch["assigned"]
                     g[x] = -np.inf if j < P else ch["ack_time"][j - P]
                 order = np.arange(len(ids))     # rotated round-robin
                 rel = []
                 while seg["pos"] < seg["idx"].size and len(rel) < chunk:
-                    t = float(seg["t"][seg["pos"]])
+                    tv = seg["t"][seg["pos"]]
+                    t = float(_lane0(seg["t"])[seg["pos"]])
                     go = g[order]
+                    go0 = _lane0(go)
                     with np.errstate(invalid="ignore"):
-                        open_pos = np.nonzero(go <= t)[0]
+                        open_pos = np.nonzero(go0 <= t)[0]
                     if open_pos.size:
                         pos = int(open_pos[0])
-                        gate = float(go[pos])
                     else:
-                        finite = np.isfinite(go)
+                        finite = np.isfinite(go0)
                         if not finite.any():
                             break   # re-openings unknown: wait for acks
-                        pos = int(np.argmin(np.where(finite, go, np.inf)))
-                        gate = float(go[pos])
+                        pos = int(np.argmin(np.where(finite, go0, np.inf)))
+                    gate = go[pos]
                     x = int(order[pos])
                     order = np.append(np.delete(order, pos), x)
                     ch = chans[x]
@@ -786,7 +976,7 @@ class VectorizedStreamSim:
                     g[x] = (-np.inf if j + 1 < P
                             else ch["ack_time"][j + 1 - P])
                     rel.append((seg["idx"][seg["pos"]], ids[x], j,
-                                max(t, gate)))
+                                np.maximum(tv, gate)))
                     seg["pos"] += 1
                 q["consumers"] = ids = [ids[x] for x in order]
                 if rel:
@@ -832,11 +1022,12 @@ class VectorizedStreamSim:
             ch = self._chan(c)
             if cohort["consumer"]:
                 # serial parse/handle chain on the consumer client
-                o = m[np.argsort(t_land[m], kind="stable")]
+                o = m[np.argsort(_lane0(t_land)[m], kind="stable")]
                 proc = self._proc_s * (1.0 + self._jit(o.size))
                 ends = _fifo_scan(t_land[o] + recv, proc, ch["free"])
                 seen[o] = ends
-                ch["free"] = float(ends[-1])
+                ch["free"] = (float(ends[-1]) if ends.ndim == 1
+                              else ends[-1].copy())
             else:
                 seen[m] = t_land[m] + recv
             ch["seen"][j[m]] = seen[m]
@@ -844,7 +1035,7 @@ class VectorizedStreamSim:
             # immediately once the basic.qos window is full)
             B = max(1, self.p.ack_batch)
             P = max(1, self.p.prefetch)
-            for mi in m[np.argsort(seen[m], kind="stable")]:
+            for mi in m[np.argsort(_lane0(seen)[m], kind="stable")]:
                 ch["last_tag"] = max(ch["last_tag"], int(j[mi]) + 1)
                 ch["since"] += 1
                 if (ch["since"] >= B
@@ -858,17 +1049,119 @@ class VectorizedStreamSim:
         cohort["on_seen"](cidx, seen, chan)
         self._pump_queues([self._chan_queue[c] for c in touched])
 
+    # -- the one reject-retry / deferred-confirm publish shape ----------------
+    def _publish_with_retry(self, members: np.ndarray, t0: np.ndarray, *,
+                            flow: str, size: int,
+                            combos_of: Callable[[np.ndarray], np.ndarray],
+                            groups_of: Callable,
+                            deliver: Callable,
+                            set_confirms: Optional[Callable] = None,
+                            mark_confirmed: Optional[Callable] = None
+                            ) -> None:
+        """Push a publish cohort through ``flow`` with the full broker
+        admission treatment, shared by all four publish legs (work
+        publish, feedback reply, broadcast fanout, gather reply):
+
+        * **reject-publish overflow** — members rejected at their target
+          queue's byte cap re-enter the publish path after
+          ``publish_retry_s`` (the producer re-publish backoff), as a
+          retry cohort;
+        * **credit-flow deferred confirms** — accepted members that push
+          a tracked queue past its credit threshold have their publisher
+          confirm withheld on that queue's ``deferred`` list until the
+          pump drains it to ``flow_resume`` (only when ``set_confirms``
+          is given — reply/gather legs never gate producer windows).
+
+        ``members`` is an opaque index array (positions into whatever
+        per-leg arrays the callbacks capture); retries thread subsets of
+        it back through ``combos_of``.  ``groups_of(members)`` yields
+        ``(group_key, queue_states, positions)`` — one admission group
+        per target queue (``len(queue_states) > 1`` = atomic fanout).
+        ``deliver(group_key, members, t_enq)`` hands accepted members to
+        the delivery pump; ``set_confirms(members, t_conf)`` /
+        ``mark_confirmed(members)`` record resolved publisher confirms.
+        """
+        p = self.p
+        ctrl = self.arch.control_latency_s()
+
+        def attempt(mem: np.ndarray, t_arr: np.ndarray) -> None:
+            def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
+                land(mem[mb], t_enq)
+
+            self._push_transit(t_arr, size, flow, combos_of(mem),
+                               on_part=part)
+
+        def land(mem: np.ndarray, t_enq: np.ndarray) -> None:
+            for gkey, queues, pos in groups_of(mem):
+                acc, blocked_on = self._enqueue_batch(queues, t_enq[pos])
+                rej = np.nonzero(~acc)[0]
+                if rej.size:
+                    self.rejected += rej.size
+                    attempt(mem[pos[rej]],
+                            t_enq[pos[rej]] + p.publish_retry_s)
+                ok = np.nonzero(acc)[0]
+                if ok.size == 0:
+                    continue
+                if set_confirms is None:
+                    deliver(gkey, mem[pos[ok]], t_enq[pos[ok]])
+                    continue
+                if acc.all() and not any(blocked_on):
+                    # hot path (no reject, no credit event): bulk
+                    # confirms, one prefix advance
+                    set_confirms(mem[pos], t_enq[pos] + ctrl)
+                    deliver(gkey, mem[pos], t_enq[pos])
+                    mark_confirmed(mem[pos])
+                    continue
+                now = []
+                any_deferred = None
+                for k in ok:
+                    mk = int(mem[pos[k]])
+                    bq = blocked_on[k]
+                    if bq is None:
+                        set_confirms(np.array([mk]),
+                                     np.array([t_enq[pos[k]] + ctrl]))
+                        now.append(mk)
+                    else:
+                        # credit flow: withhold this confirm until the
+                        # pump drains the queue to flow_resume
+                        self.blocked += 1
+                        any_deferred = bq
+
+                        def setter(t_conf, mk=mk):
+                            set_confirms(np.array([mk]),
+                                         np.array([t_conf]))
+                            mark_confirmed(np.array([mk]))
+                        bq["deferred"].append(setter)
+                deliver(gkey, mem[pos[ok]], t_enq[pos[ok]])
+                if now:
+                    mark_confirmed(np.asarray(now, dtype=int))
+                if any_deferred is not None:
+                    self._try_resume(any_deferred)
+
+        attempt(members, t0)
+
     # -- main ------------------------------------------------------------------
-    def run(self) -> RunResult:
+    def _setup(self) -> None:
+        """Build the pattern topology and launch the initial publish
+        rounds (everything up to draining the event heap)."""
         pat = self.spec.pattern
         if pat in ("work_sharing", "feedback"):
-            return self._run_work(feedback=(pat == "feedback"))
-        if pat in ("broadcast", "broadcast_gather"):
-            return self._run_broadcast(gather=(pat == "broadcast_gather"))
-        raise ValueError(f"unknown pattern {pat!r}")
+            self._setup_work(feedback=(pat == "feedback"))
+        elif pat in ("broadcast", "broadcast_gather"):
+            self._setup_broadcast(gather=(pat == "broadcast_gather"))
+        else:
+            raise ValueError(f"unknown pattern {pat!r}")
+
+    def run(self) -> RunResult:
+        if self._lanes > 1:
+            raise RuntimeError("this engine was built with stack_seeds; "
+                               "use run_stacked()")
+        self._setup()
+        self._drain_all()
+        return self._finalize()
 
     # -- work sharing (+ feedback) --------------------------------------------
-    def _run_work(self, feedback: bool) -> RunResult:
+    def _setup_work(self, feedback: bool) -> None:
         spec, p, inv = self.spec, self.p, self.inv
         nP, nC = spec.n_producers, spec.n_consumers
         per_producer = spec.total_messages // nP
@@ -877,13 +1170,12 @@ class VectorizedStreamSim:
         ctrl = self.arch.control_latency_s()
         W = max(2, min(p.confirm_window, p.window_bytes // size))
 
-        nq = min(p.n_work_queues, nC)
         # declare order matches the heap engine: work queues first (homes
-        # round-robin from 0), then per-producer reply queues
+        # round-robin from 0; per-tenant vhost queues in tenant order),
+        # then per-producer reply queues
+        nq, q_consumers, prod_queues, q_pubs = self._work_topology()
         q_home = np.arange(nq) % inv.n_dsn
         reply_home = (nq + np.arange(nP)) % inv.n_dsn
-        q_consumers = [np.arange(nC)[np.arange(nC) % nq == q]
-                       for q in range(nq)]
 
         pr_node = np.arange(nP) % inv.n_producer_nodes
         pr_bnode = np.arange(nP) % inv.n_dsn
@@ -892,12 +1184,19 @@ class VectorizedStreamSim:
 
         i_idx = np.broadcast_to(np.arange(per_producer), (nP, per_producer))
         pr_idx = np.broadcast_to(np.arange(nP)[:, None], (nP, per_producer))
-        msg_q = (pr_idx + i_idx) % nq
+        # producer pr round-robins over its own queue list (all queues
+        # when shared; its tenant's vhost queues when isolated)
+        msg_q = np.empty((nP, per_producer), dtype=int)
+        for pr in range(nP):
+            ql = np.asarray(prod_queues[pr])
+            msg_q[pr] = ql[(pr + np.arange(per_producer)) % ql.size]
 
-        confirms = np.zeros((nP, per_producer))
-        pub_start = np.zeros((nP, per_producer))
-        consume_t = np.full(nP * per_producer, np.nan)
-        rtts = np.full(nP * per_producer, np.nan) if feedback else None
+        lanes = () if self._lanes == 1 else (self._lanes,)
+        confirms = np.zeros((nP, per_producer) + lanes)
+        pub_start = np.zeros((nP, per_producer) + lanes)
+        consume_t = np.full((nP * per_producer,) + lanes, np.nan)
+        rtts = (np.full((nP * per_producer,) + lanes, np.nan)
+                if feedback else None)
         recv_req = self._recv_latency(size)
         reply_size = max(1, int(size * p.reply_factor))
         recv_rep = self._recv_latency(reply_size)
@@ -909,7 +1208,8 @@ class VectorizedStreamSim:
         rcap = (p.queue_max_bytes // reply_size if p.queue_max_bytes
                 else None)
         work_q = [self._queue_state(("work", qi), q_consumers[qi], size,
-                                    credit=FLOW_CREDIT * nP, cap_msgs=cap)
+                                    credit=FLOW_CREDIT * q_pubs[qi],
+                                    cap_msgs=cap)
                   for qi in range(nq)]
         if feedback:
             for pr in range(nP):
@@ -917,14 +1217,11 @@ class VectorizedStreamSim:
                                   cap_msgs=rcap)
 
         R = max(1, min(W, self._round))
-        # overflow regime reachable (byte cap below the per-queue volume,
-        # or a publish surplus that can pile backlog past the credit
-        # threshold): per-message rounds reproduce the heap engine's
-        # burst-and-retry dynamics at the blocking boundary
-        per_q = per_producer * nP / nq
-        if self.p.vec_round is None and (
-                (cap is not None and cap < per_q)
-                or FLOW_CREDIT * nP < self.publish_surplus * per_q):
+        # flow-control events reachable (byte cap below the per-queue
+        # volume, or a publish surplus that can pile backlog past the
+        # credit threshold): per-message rounds reproduce the heap
+        # engine's burst-and-retry dynamics at the blocking boundary
+        if self.p.vec_round is None and self.flow_events_possible():
             R = 1
         n_rounds = -(-per_producer // R)
         # per-producer resolved-confirm prefixes: round r may launch once
@@ -968,7 +1265,7 @@ class VectorizedStreamSim:
         def launch_pub(r: int) -> None:
             lo, hi = r * R, min((r + 1) * R, per_producer)
             i_blk = np.arange(lo, hi)
-            gate = np.zeros((nP, i_blk.size))
+            gate = np.zeros((nP, i_blk.size) + lanes)
             m_g = i_blk >= W
             gate[:, m_g] = confirms[:, i_blk[m_g] - W]
             s_blk = gate + flush
@@ -977,132 +1274,82 @@ class VectorizedStreamSim:
             flat_i = i_idx[:, i_blk].ravel()
             flat_q = msg_q[:, i_blk].ravel()
 
-            def attempt(sel: np.ndarray, t0: np.ndarray) -> None:
-                combos = np.stack([pr_node[flat_pr[sel]],
-                                   pr_bnode[flat_pr[sel]],
-                                   q_home[flat_q[sel]]], axis=1)
+            def combos_of(mem: np.ndarray) -> np.ndarray:
+                return np.stack([pr_node[flat_pr[mem]],
+                                 pr_bnode[flat_pr[mem]],
+                                 q_home[flat_q[mem]]], axis=1)
 
-                def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
-                    land(sel[mb], t_enq)
-
-                self._push_transit(t0, size, "publish_path", combos,
-                                   on_part=part)
-
-            def land(sel: np.ndarray, t_enq: np.ndarray) -> None:
-                # messages enqueue (and confirm, and become deliverable)
-                # as they land — not when the whole round has finished
-                prs, iis, qs = flat_pr[sel], flat_i[sel], flat_q[sel]
+            def groups_of(mem: np.ndarray):
+                qs = flat_q[mem]
                 for qi in np.unique(qs):
-                    m = np.nonzero(qs == qi)[0]
-                    q = work_q[int(qi)]
-                    acc, blocked_on = self._enqueue_batch([q], t_enq[m])
-                    rej = np.nonzero(~acc)[0]
-                    if rej.size:
-                        # reject-publish: producer re-publish backoff as a
-                        # cohort re-injection round
-                        self.rejected += rej.size
-                        attempt(sel[m[rej]],
-                                t_enq[m[rej]] + p.publish_retry_s)
-                    ok = np.nonzero(acc)[0]
-                    if ok.size == 0:
-                        continue
-                    if acc.all() and not any(blocked_on):
-                        # hot path (no reject, no credit event): bulk
-                        # confirms, one prefix advance
-                        confirms[prs[m], iis[m]] = t_enq[m] + ctrl
-                        self._deliver_queue(
-                            ("work", int(qi)), q_consumers[int(qi)],
-                            t_enq[m], prs[m] * per_producer + iis[m],
-                            combos_del_by_q[int(qi)], size,
-                            "delivery_path", consumer=True,
-                            recv=recv_req, on_seen=on_seen_del)
-                        mark_confirmed(prs[m], iis[m])
-                        continue
-                    now = []
-                    any_deferred = None
-                    for k in ok:
-                        mk = m[k]
-                        bq = blocked_on[k]
-                        if bq is None:
-                            confirms[prs[mk], iis[mk]] = t_enq[mk] + ctrl
-                            now.append(mk)
-                        else:
-                            # credit flow: withhold this confirm until the
-                            # pump drains the queue to flow_resume
-                            self.blocked += 1
-                            any_deferred = bq
+                    yield (int(qi), [work_q[int(qi)]],
+                           np.nonzero(qs == qi)[0])
 
-                            def setter(t_conf, pr_k=int(prs[mk]),
-                                       i_k=int(iis[mk])):
-                                confirms[pr_k, i_k] = t_conf
-                                mark_confirmed([pr_k], [i_k])
-                            bq["deferred"].append(setter)
-                    gidx = prs[m[ok]] * per_producer + iis[m[ok]]
-                    self._deliver_queue(
-                        ("work", int(qi)), q_consumers[int(qi)],
-                        t_enq[m[ok]], gidx, combos_del_by_q[int(qi)],
-                        size, "delivery_path", consumer=True,
-                        recv=recv_req, on_seen=on_seen_del)
-                    if now:
-                        nw = np.asarray(now, dtype=int)
-                        mark_confirmed(prs[nw], iis[nw])
-                    if any_deferred is not None:
-                        self._try_resume(any_deferred)
+            def set_conf(mem: np.ndarray, t_conf: np.ndarray) -> None:
+                confirms[flat_pr[mem], flat_i[mem]] = t_conf
 
-            attempt(np.arange(flat_pr.size), s_blk.ravel())
+            def mark(mem: np.ndarray) -> None:
+                mark_confirmed(flat_pr[mem], flat_i[mem])
+
+            def deliver(qi: int, mem: np.ndarray,
+                        t_enq: np.ndarray) -> None:
+                self._deliver_queue(
+                    ("work", qi), q_consumers[qi], t_enq,
+                    flat_pr[mem] * per_producer + flat_i[mem],
+                    combos_del_by_q[qi], size, "delivery_path",
+                    consumer=True, recv=recv_req, on_seen=on_seen_del)
+
+            self._publish_with_retry(
+                np.arange(flat_pr.size),
+                s_blk.reshape((nP * i_blk.size,) + lanes),
+                flow="publish_path", size=size, combos_of=combos_of,
+                groups_of=groups_of, deliver=deliver,
+                set_confirms=set_conf, mark_confirmed=mark)
 
         def launch_reply(members, t_done, cons) -> None:
             # members are global message indices; producer = index // n
-            def attempt_r(mem: np.ndarray, cns: np.ndarray,
-                          t0: np.ndarray) -> None:
-                pr_m = mem // per_producer
-                combos = np.stack([c_node[cns], c_bnode[cns],
-                                   reply_home[pr_m]], axis=1)
+            mem_arr, cns_arr = members, cons
 
-                def part(sub: np.ndarray, t_renq: np.ndarray) -> None:
-                    land_r(mem[sub], cns[sub], t_renq)
+            def combos_of(pos: np.ndarray) -> np.ndarray:
+                return np.stack([c_node[cns_arr[pos]],
+                                 c_bnode[cns_arr[pos]],
+                                 reply_home[mem_arr[pos] // per_producer]],
+                                axis=1)
 
-                self._push_transit(t0, reply_size, "reply_publish_path",
-                                   combos, on_part=part)
-
-            def land_r(mem: np.ndarray, cns: np.ndarray,
-                       t_renq: np.ndarray) -> None:
-                prs = mem // per_producer
+            def groups_of(pos: np.ndarray):
+                prs = mem_arr[pos] // per_producer
                 for pr in np.unique(prs):
-                    pos = np.nonzero(prs == pr)[0]
-                    q = self._queues[("reply", int(pr))]
-                    acc, _ = self._enqueue_batch([q], t_renq[pos])
-                    rej = pos[~acc]
-                    if rej.size:
-                        self.rejected += rej.size
-                        attempt_r(mem[rej], cns[rej],
-                                  t_renq[rej] + p.publish_retry_s)
-                    ok = pos[acc]
-                    if ok.size == 0:
-                        continue
+                    yield (int(pr), [self._queues[("reply", int(pr))]],
+                           np.nonzero(prs == pr)[0])
 
-                    def combos_fn(sub_mem, _cons, pr=int(pr)):
-                        return np.broadcast_to(
-                            [reply_home[pr], pr_bnode[pr], pr_node[pr]],
-                            (sub_mem.size, 3))
+            def deliver(pr: int, pos_sel: np.ndarray,
+                        t_renq: np.ndarray) -> None:
+                def combos_fn(sub_mem, _cons, pr=pr):
+                    return np.broadcast_to(
+                        [reply_home[pr], pr_bnode[pr], pr_node[pr]],
+                        (sub_mem.size, 3))
 
-                    def on_seen(sub_mem, t_seen, _cons):
-                        rtts[sub_mem] = t_seen - pub_start.ravel()[sub_mem]
+                def on_seen(sub_mem, t_seen, _cons):
+                    flat_pub = pub_start.reshape(
+                        (nP * per_producer,) + lanes)
+                    rtts[sub_mem] = t_seen - flat_pub[sub_mem]
 
-                    self._deliver_queue(
-                        ("reply", int(pr)), [nC + int(pr)], t_renq[ok],
-                        mem[ok], combos_fn, reply_size,
-                        "reply_delivery_path", consumer=False,
-                        recv=recv_rep, on_seen=on_seen)
+                self._deliver_queue(
+                    ("reply", pr), [nC + pr], t_renq, mem_arr[pos_sel],
+                    combos_fn, reply_size, "reply_delivery_path",
+                    consumer=False, recv=recv_rep, on_seen=on_seen)
 
-            attempt_r(members, cons, t_done)
+            self._publish_with_retry(
+                np.arange(mem_arr.size), t_done,
+                flow="reply_publish_path", size=reply_size,
+                combos_of=combos_of, groups_of=groups_of, deliver=deliver)
 
         advance_pubs()
-        self._drain_all()
-        return self._result(consume_t, rtts, pub_start.ravel())
+        self._fin_consume, self._fin_rtts = consume_t, rtts
+        self._fin_pub = pub_start
 
     # -- broadcast (+ gather) --------------------------------------------------
-    def _run_broadcast(self, gather: bool) -> RunResult:
+    def _setup_broadcast(self, gather: bool) -> None:
         spec, p, inv = self.spec, self.p, self.inv
         nC = spec.n_consumers
         assert spec.n_producers == 1, "broadcast patterns use one producer"
@@ -1118,10 +1365,12 @@ class VectorizedStreamSim:
         c_node = np.arange(nC) % inv.n_consumer_nodes
         c_bnode = (np.arange(nC) + 1) % inv.n_dsn
 
-        confirms = np.zeros(per_producer)
-        pub_start = np.zeros(per_producer)
-        consume_t = np.full(per_producer * nC, np.nan)
-        rtts = np.full(per_producer * nC, np.nan) if gather else None
+        lanes = () if self._lanes == 1 else (self._lanes,)
+        confirms = np.zeros((per_producer,) + lanes)
+        pub_start = np.zeros((per_producer,) + lanes)
+        consume_t = np.full((per_producer * nC,) + lanes, np.nan)
+        rtts = (np.full((per_producer * nC,) + lanes, np.nan)
+                if gather else None)
         recv_req = self._recv_latency(size)
         reply_size = max(1, int(size * p.reply_factor))
         recv_rep = self._recv_latency(reply_size)
@@ -1138,10 +1387,9 @@ class VectorizedStreamSim:
             self._queue_state(("gather",), [nC], reply_size, cap_msgs=rcap)
 
         R = max(1, min(W, self._round))
-        # overflow regime reachable on the fanout targets: see _run_work
-        if self.p.vec_round is None and (
-                (cap is not None and cap < per_producer)
-                or FLOW_CREDIT < self.publish_surplus * per_producer):
+        # flow-control events reachable on the fanout targets: see
+        # _setup_work
+        if self.p.vec_round is None and self.flow_events_possible():
             R = 1
         n_rounds = -(-per_producer // R)
         # resolved-confirm prefix of the single producer (see _run_work)
@@ -1168,58 +1416,35 @@ class VectorizedStreamSim:
         def launch_pub(r: int) -> None:
             lo, hi = r * R, min((r + 1) * R, per_producer)
             i_blk = np.arange(lo, hi)
-            gate = np.zeros(i_blk.size)
+            gate = np.zeros((i_blk.size,) + lanes)
             m_g = i_blk >= W          # rounds can straddle the window edge
             gate[m_g] = confirms[i_blk[m_g] - W]
             s_blk = gate + flush
             pub_start[i_blk] = s_blk
 
-            def attempt(sel: np.ndarray, t0: np.ndarray) -> None:
+            def combos_of(mem: np.ndarray) -> np.ndarray:
                 # a fanout publish transits once, to the exchange's home
-                combos = np.broadcast_to([pnode, pbnode, 0], (sel.size, 3))
+                return np.broadcast_to([pnode, pbnode, 0], (mem.size, 3))
 
-                def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
-                    land(sel[mb], t_enq)
+            def groups_of(mem: np.ndarray):
+                # one admission group: reject-publish and credit flow are
+                # atomic across every fanout target (heap broker)
+                yield None, bqs, np.arange(mem.size)
 
-                self._push_transit(t0, size, "publish_path", combos,
-                                   on_part=part)
+            def set_conf(mem: np.ndarray, t_conf: np.ndarray) -> None:
+                confirms[i_blk[mem]] = t_conf
 
-            def land(sel: np.ndarray, t_enq: np.ndarray) -> None:
-                acc, blocked_on = self._enqueue_batch(bqs, t_enq)
-                rej = np.nonzero(~acc)[0]
-                if rej.size:
-                    self.rejected += rej.size
-                    attempt(sel[rej], t_enq[rej] + p.publish_retry_s)
-                ok = np.nonzero(acc)[0]
-                if ok.size == 0:
-                    return
-                if acc.all() and not any(blocked_on):
-                    confirms[i_blk[sel]] = t_enq + ctrl
-                    launch_del(i_blk[sel], t_enq)
-                    mark_confirmed(i_blk[sel])
-                    return
-                now = []
-                any_deferred = None
-                for k in ok:
-                    bq = blocked_on[k]
-                    if bq is None:
-                        confirms[i_blk[sel[k]]] = t_enq[k] + ctrl
-                        now.append(int(i_blk[sel[k]]))
-                    else:
-                        self.blocked += 1
-                        any_deferred = bq
+            def mark(mem: np.ndarray) -> None:
+                mark_confirmed(i_blk[mem])
 
-                        def setter(t_conf, i_k=int(i_blk[sel[k]])):
-                            confirms[i_k] = t_conf
-                            mark_confirmed([i_k])
-                        bq["deferred"].append(setter)
-                launch_del(i_blk[sel[ok]], t_enq[ok])
-                if now:
-                    mark_confirmed(np.asarray(now, dtype=int))
-                if any_deferred is not None:
-                    self._try_resume(any_deferred)
+            def deliver(_g, mem: np.ndarray, t_enq: np.ndarray) -> None:
+                launch_del(i_blk[mem], t_enq)
 
-            attempt(np.arange(i_blk.size), s_blk)
+            self._publish_with_retry(
+                np.arange(i_blk.size), s_blk, flow="publish_path",
+                size=size, combos_of=combos_of, groups_of=groups_of,
+                deliver=deliver, set_confirms=set_conf,
+                mark_confirmed=mark)
 
         def launch_del(i_part, t_enq) -> None:
             # replicate to every per-consumer queue; deliver each copy
@@ -1243,64 +1468,201 @@ class VectorizedStreamSim:
 
         def launch_reply(members, t_done, c) -> None:
             # members are global copy indices (c * per_producer + i)
-            def attempt_g(mem: np.ndarray, t0: np.ndarray) -> None:
-                combos = np.broadcast_to(
-                    [c_node[c], c_bnode[c], gather_home], (mem.size, 3))
+            mem_arr = members
 
-                def part(sub: np.ndarray, t_renq: np.ndarray) -> None:
-                    land_g(mem[sub], t_renq)
+            def combos_of(pos: np.ndarray) -> np.ndarray:
+                return np.broadcast_to(
+                    [c_node[c], c_bnode[c], gather_home], (pos.size, 3))
 
-                self._push_transit(t0, reply_size, "reply_publish_path",
-                                   combos, on_part=part)
+            def groups_of(pos: np.ndarray):
+                yield None, [self._queues[("gather",)]], np.arange(pos.size)
 
-            def land_g(mem: np.ndarray, t_renq: np.ndarray) -> None:
-                q = self._queues[("gather",)]
-                acc, _ = self._enqueue_batch([q], t_renq)
-                rej = np.nonzero(~acc)[0]
-                if rej.size:
-                    self.rejected += rej.size
-                    attempt_g(mem[rej], t_renq[rej] + p.publish_retry_s)
-                ok = np.nonzero(acc)[0]
-                if ok.size == 0:
-                    return
-
+            def deliver(_g, pos_sel: np.ndarray,
+                        t_renq: np.ndarray) -> None:
                 def combos_fn(sub_members, _cons):
                     return np.broadcast_to(
-                        [gather_home, pbnode, pnode], (sub_members.size, 3))
+                        [gather_home, pbnode, pnode],
+                        (sub_members.size, 3))
 
                 def on_seen(sub_members, t_seen, _cons):
                     rtts[sub_members] = (
                         t_seen - pub_start[sub_members % per_producer])
 
                 self._deliver_queue(
-                    ("gather",), [nC], t_renq[ok], mem[ok], combos_fn,
-                    reply_size, "reply_delivery_path", consumer=False,
-                    recv=recv_rep, on_seen=on_seen)
+                    ("gather",), [nC], t_renq, mem_arr[pos_sel],
+                    combos_fn, reply_size, "reply_delivery_path",
+                    consumer=False, recv=recv_rep, on_seen=on_seen)
 
-            attempt_g(members, t_done)
+            self._publish_with_retry(
+                np.arange(mem_arr.size), t_done,
+                flow="reply_publish_path", size=reply_size,
+                combos_of=combos_of, groups_of=groups_of, deliver=deliver)
 
         advance_pubs()
-        self._drain_all()
-        return self._result(consume_t, rtts, pub_start)
+        self._fin_consume, self._fin_rtts = consume_t, rtts
+        self._fin_pub = pub_start
 
     # -- shared result assembly ------------------------------------------------
-    def _result(self, consume_t: np.ndarray, rtts: Optional[np.ndarray],
+    def _finalize(self) -> RunResult:
+        """Assemble the RunResult from the state ``_setup_*`` recorded
+        (split from :meth:`run` so the stacked path can drain before
+        finalizing each lane)."""
+        return self._result(self.spec, self._fin_consume, self._fin_rtts,
+                            self._fin_pub.reshape(-1))
+
+    def _finalize_stacked(self) -> list:
+        """Per-lane results of a stacked run: lane ``s`` is the cell run
+        with ``stack_seeds[s]``.  The flow-control counters and event
+        count are scheduling-level quantities shared by all lanes (the
+        pilot's decisions), so every lane reports the same values."""
+        import dataclasses
+        pub = self._fin_pub.reshape(-1, self._lanes)
+        out = []
+        for s, seed in enumerate(self.stack_seeds):
+            spec_s = dataclasses.replace(
+                self.spec, params=dataclasses.replace(self.p, seed=seed))
+            out.append(self._result(
+                spec_s, self._fin_consume[:, s],
+                None if self._fin_rtts is None else self._fin_rtts[:, s],
+                pub[:, s]))
+        return out
+
+    def run_stacked(self) -> list:
+        """Run all ``stack_seeds`` lanes in one batched event loop and
+        return their per-lane results (in ``stack_seeds`` order).
+
+        The pilot lane (``stack_seeds[0]``) is bit-identical to a solo
+        :meth:`run` of the same spec — it drives every scheduling
+        decision with its own clock.  The other lanes run the *same
+        schedule* (cohort splits, delivery assignment, chunk boundaries)
+        with their own jitter streams, resources and FIFO carries; their
+        deviation from a solo run is bounded by the same ordering-slack
+        class of approximation as ``vec_horizon_s`` and stays well under
+        1% on aggregate summaries (see tests/test_campaign.py).  Avoid
+        stacking for overflow-regime cells: admission decisions are the
+        pilot's, so per-lane rejected/blocked counters are not
+        lane-resolved."""
+        if self._lanes == 1:
+            return [self.run()]
+        self._setup()
+        self._drain_all()
+        return self._finalize_stacked()
+
+    def _result(self, spec: ExperimentSpec, consume_t: np.ndarray,
+                rtts: Optional[np.ndarray],
                 pub_start: np.ndarray) -> RunResult:
-        consume_t = consume_t[np.isfinite(consume_t)]
-        r = (rtts[np.isfinite(rtts)] if rtts is not None
-             else np.zeros(0))
+        # arrays are indexed pr*per_producer + i (work patterns) or
+        # c*per_producer + i (broadcast), so producer attribution falls
+        # out of the finite-entry indices
+        fin_c = np.isfinite(consume_t)
+        consume_t = consume_t[fin_c]
+        fin_r = np.isfinite(rtts) if rtts is not None else None
+        r = rtts[fin_r] if rtts is not None else np.zeros(0)
+        per_producer = max(1, spec.total_messages // spec.n_producers)
+        if spec.pattern.startswith("broadcast"):
+            cp = np.zeros(consume_t.size, dtype=np.int64)
+            rp = np.zeros(r.size, dtype=np.int64)
+        else:
+            cp = np.flatnonzero(fin_c) // per_producer
+            rp = (np.flatnonzero(fin_r) // per_producer
+                  if fin_r is not None else np.zeros(0, dtype=np.int64))
         top = float(consume_t.max()) if consume_t.size else 0.0
         if r.size:
             top = max(top, float(r.max()))
         return RunResult(
-            spec=self.spec, feasible=True,
+            spec=spec, feasible=True,
             consume_times=consume_t,
             rtts=r,
             publish_starts=np.sort(pub_start),
             rejected_publishes=self.rejected,
             blocked_confirms=self.blocked,
             redelivered=0,
-            sim_time=top, n_events=self.n_events)
+            sim_time=top, n_events=self.n_events,
+            consume_producers=cp, rtt_producers=rp)
 
 
 ENGINES["vectorized"] = VectorizedStreamSim
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-run execution (the campaign layer's batched entry point)
+# ---------------------------------------------------------------------------
+
+
+def _stack_key(spec: ExperimentSpec):
+    """Cells that differ only in ``params.seed`` stack into one run."""
+    import dataclasses
+    return (spec.pattern, spec.arch, spec.workload, spec.n_producers,
+            spec.n_consumers, spec.total_messages,
+            getattr(spec, "tenants", 1),
+            getattr(spec, "tenant_isolation", "shared"),
+            repr(sorted(dataclasses.replace(
+                spec.params, seed=0).__dict__.items())))
+
+
+#: stacked lanes per run are chunked to bound the array working set
+STACK_MAX_LANES = 16
+
+
+def run_many(specs, inventory=None) -> list:
+    """Run several experiments, stacking structurally-identical cells.
+
+    The campaign layer's batched entry point: cells that differ only in
+    their seed (the paper's 3-run averaging, or wider seed sweeps) are
+    grouped and pushed through one :meth:`VectorizedStreamSim.run_stacked`
+    event loop as stacked cohort lanes — the batched run costs barely
+    more than a single solo run, instead of ``n_seeds`` times as much.
+    Heterogeneous cells (different pattern/arch/consumer-count/knobs)
+    fall back to per-cell solo execution.  Cells where broker
+    flow-control events are reachable (an explicit ``queue_max_bytes``
+    cap, or a publish surplus that can hit the credit threshold — see
+    :meth:`VectorizedStreamSim.flow_events_possible`) are never
+    stacked: admission decisions in a stacked run follow the pilot
+    lane, so the per-lane reject/block counters would not be
+    lane-resolved.
+
+    Infeasible specs come back as ``feasible=False`` results, like
+    :func:`~repro.core.simulator.run_experiment`.  Returns one
+    :class:`RunResult` per spec, in input order."""
+    from repro.core.simulator import run_experiment
+    results: list = [None] * len(specs)
+    groups: dict = {}
+    for i, spec in enumerate(specs):
+        if (spec.params.engine == "vectorized"
+                and spec.params.queue_max_bytes is None):
+            groups.setdefault(_stack_key(spec), []).append(i)
+        else:
+            groups[("solo", i)] = [i]
+    for idxs in groups.values():
+        stack = len(idxs) > 1
+        if stack:
+            # one probe per group: feasibility and flow-event
+            # reachability are structural, identical across the seeds
+            try:
+                probe = VectorizedStreamSim(specs[idxs[0]], inventory)
+            except InfeasibleConfiguration as e:
+                for i in idxs:
+                    results[i] = RunResult(spec=specs[i], feasible=False,
+                                           infeasible_reason=str(e))
+                continue
+            # credit-flow blocking is reachable even without a byte
+            # cap: keep admission decisions lane-resolved
+            stack = not probe.flow_events_possible()
+        if not stack:
+            for i in idxs:
+                results[i] = run_experiment(specs[i], inventory)
+            continue
+        for lo in range(0, len(idxs), STACK_MAX_LANES):
+            chunk = idxs[lo:lo + STACK_MAX_LANES]
+            if len(chunk) == 1:
+                results[chunk[0]] = run_experiment(specs[chunk[0]],
+                                                   inventory)
+                continue
+            seeds = [specs[i].params.seed for i in chunk]
+            sim = VectorizedStreamSim(specs[chunk[0]], inventory,
+                                      stack_seeds=seeds)
+            for i, r in zip(chunk, sim.run_stacked()):
+                results[i] = r
+    return results
+
+

@@ -1,0 +1,253 @@
+"""Campaign layer: stacked multi-seed engine runs (run_many /
+run_stacked), the declarative grid runner, and its fingerprinted cache
+resume.  The stacking contract under test: the pilot lane is
+bit-identical to a solo run, every lane conserves messages, and
+non-pilot lanes' summaries stay within a small tolerance of their solo
+equivalents (the schedule is the pilot's; the arithmetic is per-lane)."""
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import CampaignSpec, CellSpec, cell_key, run_campaign
+from repro.core.metrics import summarize
+from repro.core.patterns import sweep
+from repro.core.simulator import (
+    ExperimentSpec, SimParams, run_experiment)
+from repro.core.vectorized import VectorizedStreamSim, run_many
+from repro.core.workloads import get_workload
+
+SEEDS = (0, 1000, 2000)
+
+
+def _spec(seed, pattern="work_sharing", arch="dts", nc=4, msgs=1024, **ov):
+    wl = get_workload("generic" if pattern.startswith("broadcast")
+                      else "dstream")
+    n_producers = 1 if pattern.startswith("broadcast") else nc
+    return ExperimentSpec(pattern=pattern, workload=wl, arch=arch,
+                          n_producers=n_producers, n_consumers=nc,
+                          total_messages=msgs,
+                          params=SimParams(seed=seed, **ov))
+
+
+@pytest.mark.parametrize("pattern,msgs", [("work_sharing", 1024),
+                                          ("feedback", 1024),
+                                          ("broadcast_gather", 96)])
+def test_stacked_pilot_exact_and_lanes_close(pattern, msgs):
+    serial = [run_experiment(_spec(s, pattern, msgs=msgs)) for s in SEEDS]
+    stacked = run_many([_spec(s, pattern, msgs=msgs) for s in SEEDS])
+    # the pilot lane drives scheduling with its own clock: bit-identical
+    assert np.array_equal(serial[0].consume_times,
+                          stacked[0].consume_times)
+    assert np.array_equal(serial[0].rtts, stacked[0].rtts)
+    for a, b in zip(serial, stacked):
+        assert b.feasible and b.n_consumed == a.n_consumed
+        assert b.spec.params.seed == a.spec.params.seed
+        sa, sb = summarize(a), summarize(b)
+        assert (abs(sb.throughput_msgs_s - sa.throughput_msgs_s)
+                / sa.throughput_msgs_s) < 0.02
+        if a.rtts.size:
+            assert (b.rtts > 0).all()
+            assert (abs(sb.median_rtt_s - sa.median_rtt_s)
+                    / sa.median_rtt_s) < 0.02
+
+
+def test_stacked_deterministic():
+    r1 = run_many([_spec(s) for s in SEEDS])
+    r2 = run_many([_spec(s) for s in SEEDS])
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a.consume_times, b.consume_times)
+
+
+def test_run_many_mixed_and_fallbacks():
+    specs = [
+        _spec(0),                                  # stacks with the next
+        _spec(1000),
+        _spec(0, engine="heap"),                   # heap: per-cell solo
+        _spec(0, arch="prs-stunnel", nc=32, msgs=128),   # infeasible
+        _spec(0, nc=8),                            # different shape: solo
+    ]
+    out = run_many(specs)
+    assert [r.feasible for r in out] == [True, True, True, False, True]
+    assert "connection limit" in out[3].infeasible_reason
+    # heap cell really ran on the heap engine's exact path
+    ref = run_experiment(_spec(0, engine="heap"))
+    assert np.array_equal(out[2].consume_times, ref.consume_times)
+
+
+def test_overflow_cells_never_stacked():
+    """Admission decisions in a stacked run follow the pilot, so cells
+    with an explicit byte cap (overflow regime) must run solo — their
+    per-lane reject counters match per-cell execution exactly."""
+    from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
+    wl = get_workload("dstream")
+    cap = 96 * wl.payload_bytes
+    specs = [ExperimentSpec(
+        pattern="feedback", workload=wl, arch="dts", n_producers=2,
+        n_consumers=2, total_messages=2048,
+        params=SimParams(seed=s, queue_max_bytes=cap,
+                         **OVERFLOW_STRESS_DEFAULTS)) for s in SEEDS]
+    stacked = run_many(specs)
+    for s, r in zip(SEEDS, stacked):
+        solo = run_experiment(specs[SEEDS.index(s)])
+        assert r.rejected_publishes == solo.rejected_publishes > 0
+        assert np.array_equal(r.consume_times, solo.consume_times)
+
+
+def test_credit_flow_cells_never_stacked():
+    """Credit-flow blocking can fire without a byte cap (work queues
+    always track the credit threshold); those cells must also run solo
+    so the per-lane blocked_confirms counters stay lane-resolved."""
+    from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
+    specs = [_spec(s, "feedback", nc=2, msgs=2048,
+                   **OVERFLOW_STRESS_DEFAULTS) for s in SEEDS]
+    stacked = run_many(specs)
+    for spec, r in zip(specs, stacked):
+        solo = run_experiment(spec)
+        assert solo.blocked_confirms > 0
+        assert r.blocked_confirms == solo.blocked_confirms
+        assert np.array_equal(r.consume_times, solo.consume_times)
+
+
+def test_stacked_constructor_validation():
+    with pytest.raises(ValueError, match="pilot"):
+        VectorizedStreamSim(_spec(0), stack_seeds=[1, 0])
+    sim = VectorizedStreamSim(_spec(0), stack_seeds=[0, 1])
+    with pytest.raises(RuntimeError, match="run_stacked"):
+        sim.run()
+
+
+# -- the declarative grid + runner ----------------------------------------
+
+
+def test_campaign_cells_and_per_cell_overrides():
+    spec = CampaignSpec(
+        name="t", patterns=("work_sharing", "feedback"),
+        architectures=("dts",), consumers=(2, 4), n_runs=2,
+        total_messages=256, params={"prefetch": 32},
+        cell_params=[({"pattern": "feedback"}, {"ack_batch": 2}),
+                     ({"pattern": "feedback", "n_consumers": 4},
+                      {"prefetch": 16})])
+    cells = spec.cells()
+    assert len(cells) == 2 * 2 * 2
+    by = {(c.pattern, c.n_consumers, c.seed): dict(c.overrides)
+          for c in cells}
+    assert by[("work_sharing", 2, 0)] == {"prefetch": 32}
+    assert by[("feedback", 2, 0)] == {"prefetch": 32, "ack_batch": 2}
+    assert by[("feedback", 4, 1000)] == {"prefetch": 16, "ack_batch": 2}
+    # JSON round trip preserves the grid
+    again = CampaignSpec.from_json(spec.to_json())
+    assert [cell_key(c) for c in again.cells()] == \
+        [cell_key(c) for c in cells]
+
+
+def test_cell_key_versioned_and_distinct():
+    c = CellSpec(pattern="work_sharing", arch="dts", workload="dstream",
+                 n_consumers=4, total_messages=256, seed=0)
+    k = cell_key(c)
+    assert k.startswith("v2|engine=vectorized|")
+    import dataclasses
+    assert cell_key(dataclasses.replace(c, seed=1)) != k
+    assert cell_key(dataclasses.replace(
+        c, overrides=(("prefetch", 16),))) != k
+
+
+def test_campaign_matches_serial_sweep():
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        architectures=("dts", "mss"), consumers=(4,),
+                        n_runs=3, total_messages=768)
+    res = run_campaign(spec, workers=0)
+    serial = sweep("work_sharing", ("dts", "mss"), "dstream",
+                   consumers=(4,), n_runs=3, total_messages=768)
+    assert len(res.cells) == 6 and len(res.averaged) == 2
+    by = {(s.arch, s.n_consumers): s for s in res.averaged}
+    for s in serial:
+        c = by[(s.arch, s.n_consumers)]
+        assert c.n_runs == s.n_runs == 3
+        assert (abs(c.throughput_msgs_s - s.throughput_msgs_s)
+                / s.throughput_msgs_s) < 0.02
+
+
+def test_campaign_cache_resume(tmp_path):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Cache
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        architectures=("dts",), consumers=(2,),
+                        n_runs=2, total_messages=256)
+    cache = Cache(str(tmp_path / "cache.json"))
+    r1 = run_campaign(spec, cache=cache, workers=0)
+    assert r1.n_cached == 0
+    # second run: everything served from the cache, nothing re-run
+    cache2 = Cache(str(tmp_path / "cache.json"))
+    r2 = run_campaign(spec, cache=cache2, workers=0)
+    assert r2.n_cached == len(r2.cells) == 2
+    for a, b in zip(r1.summaries, r2.summaries):
+        assert a.throughput_msgs_s == b.throughput_msgs_s
+    # changing a knob changes the fingerprint: cache misses again
+    spec2 = CampaignSpec(name="t", patterns=("work_sharing",),
+                         architectures=("dts",), consumers=(2,),
+                         n_runs=2, total_messages=256,
+                         params={"prefetch": 16})
+    assert run_campaign(spec2, cache=cache2, workers=0).n_cached == 0
+
+
+def test_average_summaries_keeps_fractional_reject_means():
+    """int(np.mean(...)) used to floor a rare-overflow cell's mean
+    reject count (e.g. one seed with 1 reject out of 3) to an invisible
+    0 — the means must stay float."""
+    from repro.core.metrics import Summary
+    from repro.core.patterns import average_summaries
+    base = dict(arch="dts", pattern="feedback", workload="dstream",
+                n_producers=2, n_consumers=2, feasible=True)
+    avg = average_summaries([Summary(**base, rejected=1, blocked=0),
+                             Summary(**base, rejected=0, blocked=2),
+                             Summary(**base, rejected=0, blocked=0)])
+    assert avg.rejected == pytest.approx(1 / 3)
+    assert avg.blocked == pytest.approx(2 / 3)
+    assert avg.n_runs == 3
+
+
+def test_campaign_group_is_the_cache_unit(tmp_path):
+    """A partially-cached group must re-run whole: serving the partial
+    hits would re-stack the remaining seeds behind a different pilot
+    lane, making cached numbers depend on where a campaign was
+    interrupted."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Cache
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        architectures=("dts",), consumers=(2,),
+                        n_runs=2, total_messages=256)
+    cache = Cache(str(tmp_path / "cache.json"))
+    cold = run_campaign(spec, cache=cache, workers=0)
+    # drop one seed's entry: the group is now partial
+    victim = cell_key(cold.cells[1])
+    del cache.data[victim]
+    cache.save()
+    resumed = run_campaign(spec, cache=Cache(str(tmp_path / "cache.json")),
+                           workers=0)
+    assert resumed.n_cached == 0            # whole group re-ran
+    for a, b in zip(cold.summaries, resumed.summaries):
+        assert a.throughput_msgs_s == b.throughput_msgs_s
+
+
+def test_campaign_validates_grid_upfront():
+    bad = CampaignSpec(name="t", patterns=("feedback",),
+                       architectures=("dts",), consumers=(8,),
+                       n_runs=1, total_messages=64, tenants=(3,))
+    with pytest.raises(ValueError, match="evenly divide"):
+        run_campaign(bad, workers=0)
+    with pytest.raises(KeyError):
+        run_campaign(CampaignSpec(name="t", workloads=("dstreamm",),
+                                  n_runs=1, total_messages=64), workers=0)
+
+
+def test_campaign_infeasible_cells_reported():
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        architectures=("prs-stunnel",), consumers=(32,),
+                        n_runs=2, total_messages=128)
+    res = run_campaign(spec, workers=0)
+    assert all(not s.feasible for s in res.summaries)
+    assert not res.averaged[0].feasible and res.averaged[0].n_runs == 0
