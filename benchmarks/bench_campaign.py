@@ -1,20 +1,27 @@
 """Campaign layer benchmarks: batched grids + multi-tenant MSS curve.
 
-Two cell families:
+Three cell families:
 
 * ``campaign/batched_vs_serial`` — the same (pattern x arch x consumers
   x 3 seeds) grid through ``patterns.sweep`` (the serial cell-at-a-time
   loop) and through ``campaign.run_campaign`` (seed-stacked batched
   runs + process fan-out).  'derived' carries the wall-clock speedup —
-  the PR's >=2x acceptance gate — and the worst averaged-summary
+  the PR-3 >=2x acceptance gate — and the worst averaged-summary
   deviation between the two paths.
+* ``campaign/stacked_overflow`` — the same comparison on an
+  *overflow-regime* cell (tight queue cap, reject-publish + retry
+  active): seed lanes stacked through one lane-resolved flow-control
+  event loop vs per-cell serial runs.  'derived' carries the speedup —
+  the PR-4 >=2x acceptance gate — plus the worst per-lane summary
+  deviation from each seed's solo *heap* run (the <=5% contract) and
+  the per-lane reject counts.
 * ``campaign/multi_tenant/*`` — the paper's §6 MSS multi-user
   scalability claim made quantitative: N independent feedback workflows
   (1 producer + 1 consumer each) share one managed broker, N sweeping
   1 -> 64.  'derived' reports per-tenant throughput, RTT, the Jain
   fairness index and degradation vs the single-tenant baseline.
 
-``CAMPAIGN_BENCH_SMOKE=1`` shrinks both families for CI.
+``CAMPAIGN_BENCH_SMOKE=1`` shrinks all families for CI.
 """
 
 from __future__ import annotations
@@ -22,9 +29,16 @@ from __future__ import annotations
 import os
 import time
 
+import numpy as np
+
 from benchmarks.common import Cache, cache_key, resolve_engine
+from repro.core.broker import ClassicQueue
 from repro.core.campaign import CampaignSpec, run_campaign
-from repro.core.patterns import multi_tenant, sweep
+from repro.core.metrics import summarize
+from repro.core.patterns import (
+    OVERFLOW_STRESS_DEFAULTS, multi_tenant, sweep)
+from repro.core.simulator import ExperimentSpec, SimParams, run_experiment
+from repro.core.workloads import DSTREAM
 
 SMOKE = os.environ.get("CAMPAIGN_BENCH_SMOKE") == "1"
 
@@ -34,12 +48,14 @@ if SMOKE:
     TENANTS = (1, 4, 16)
     TENANT_MSGS = 64
     TENANT_RUNS = 1
+    OVF = dict(nc=2, msgs=2048, n_seeds=4, heap=False)
 else:
     GRID = dict(patterns=("feedback",), architectures=("dts", "mss"),
                 consumers=(4, 8), n_runs=3, total_messages=2048)
     TENANTS = (1, 2, 4, 8, 16, 32, 64)
     TENANT_MSGS = 256
     TENANT_RUNS = 3
+    OVF = dict(nc=4, msgs=8192, n_seeds=4, heap=True)
 
 
 def _speedup_cell() -> dict:
@@ -71,6 +87,55 @@ def _speedup_cell() -> dict:
             "n_cells": len(res.cells), "max_summary_dev": dev}
 
 
+def _overflow_spec(seed: int, engine: str) -> ExperimentSpec:
+    nc = OVF["nc"]
+    cap = int(ClassicQueue.FLOW_CREDIT * nc * 1.06) * DSTREAM.payload_bytes
+    return ExperimentSpec(
+        pattern="feedback", workload=DSTREAM, arch="dts",
+        n_producers=nc, n_consumers=nc, total_messages=OVF["msgs"],
+        params=SimParams(seed=seed, engine=engine, queue_max_bytes=cap,
+                         **OVERFLOW_STRESS_DEFAULTS))
+
+
+def _stacked_overflow_cell() -> dict:
+    """Stacked overflow grid: N seed-lanes of one reject-publish cell
+    through the lane-resolved batched event loop vs N per-cell runs.
+    Flow control is lane-resolved, so this regime — which PR 3 had to
+    run per-cell — now batches; the per-lane contract is checked
+    against each seed's solo heap run."""
+    from repro.core.vectorized import run_many
+    seeds = [1000 * r for r in range(OVF["n_seeds"])]
+    specs = [_overflow_spec(s, "vectorized") for s in seeds]
+    t0 = time.time()
+    serial = [run_experiment(s) for s in specs]
+    wall_serial = time.time() - t0
+    t0 = time.time()
+    stacked = run_many(specs)
+    wall_stacked = time.time() - t0
+    dev = 0.0
+    if OVF["heap"]:
+        for s, v in zip(seeds, stacked):
+            hs = summarize(run_experiment(_overflow_spec(s, "heap")))
+            vs = summarize(v)
+            dev = max(dev,
+                      abs(vs.throughput_msgs_s - hs.throughput_msgs_s)
+                      / hs.throughput_msgs_s,
+                      abs(vs.median_rtt_s - hs.median_rtt_s)
+                      / hs.median_rtt_s)
+    else:   # smoke: deviation vs the per-cell vectorized runs instead
+        for a, b in zip(serial, stacked):
+            sa, sb = summarize(a), summarize(b)
+            dev = max(dev, abs(sb.throughput_msgs_s - sa.throughput_msgs_s)
+                      / sa.throughput_msgs_s)
+    assert all(r.rejected_publishes > 0 for r in stacked)
+    assert np.array_equal(serial[0].consume_times, stacked[0].consume_times)
+    return {"wall_serial": wall_serial, "wall_stacked": wall_stacked,
+            "speedup": wall_serial / wall_stacked,
+            "n_lanes": len(seeds), "max_lane_dev": dev,
+            "vs": "heap" if OVF["heap"] else "vectorized",
+            "rejected": [int(r.rejected_publishes) for r in stacked]}
+
+
 def run(cache: Cache):
     rows = []
 
@@ -85,6 +150,23 @@ def run(cache: Cache):
                  f"{c['wall_serial']:.1f}s campaign "
                  f"{c['wall_campaign']:.1f}s, {c['n_cells']} cells) "
                  f"max_dev={100 * c['max_summary_dev']:.2f}%"))
+
+    ovf_tag = f"dts|c{OVF['nc']}|m{OVF['msgs']}|l{OVF['n_seeds']}"
+    ovf_params = dict(OVERFLOW_STRESS_DEFAULTS,
+                      queue_max_bytes=int(ClassicQueue.FLOW_CREDIT
+                                          * OVF["nc"] * 1.06)
+                      * DSTREAM.payload_bytes)
+    c = cache.get_or(
+        cache_key(f"campaign|stacked_overflow|{ovf_tag}",
+                  engine="vectorized", **ovf_params),
+        _stacked_overflow_cell)
+    rows.append((f"campaign/stacked_overflow/{ovf_tag}",
+                 c["wall_stacked"] * 1e6 / max(1, c["n_lanes"]),
+                 f"speedup={c['speedup']:.2f}x (serial "
+                 f"{c['wall_serial']:.1f}s stacked "
+                 f"{c['wall_stacked']:.1f}s, {c['n_lanes']} lanes) "
+                 f"max_lane_dev={100 * c['max_lane_dev']:.2f}% "
+                 f"vs {c['vs']} rej={c['rejected']}"))
 
     def tenant_cells() -> dict:
         pts = multi_tenant("mss", TENANTS,

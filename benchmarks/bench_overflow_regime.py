@@ -17,9 +17,15 @@ Cell families:
   aggregate drain rate (consumer processing time scales with the fleet,
   so producers outpace the drain at every size and the queue pins at its
   cap — the pure overflow/retry path at affordable message volumes).
+* ``overflow/stacked/*`` — the parity cell across N seed lanes through
+  ONE lane-resolved stacked event loop vs N per-cell runs; 'derived'
+  carries the wall-clock speedup and the per-lane reject-count spread
+  (lane-resolved counters: each lane's own admission realization, not
+  clones of the pilot's).
 
-Set ``OVERFLOW_BENCH_SMOKE=1`` to run only the parity cell and the
-64-consumer scale cell (the CI smoke configuration).
+Set ``OVERFLOW_BENCH_SMOKE=1`` to run only the parity cell, the
+64-consumer scale cell and a shrunk stacked cell (the CI smoke
+configuration).
 """
 
 from __future__ import annotations
@@ -34,6 +40,8 @@ from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS, overflow_stress
 from repro.core.workloads import DSTREAM
 
 PARITY_NC = 4
+#: seed lanes of the stacked-overflow cell (lane-resolved flow control)
+STACKED_LANES = 6
 SCALE_NCS = (64, 256, 1024)
 SCALE_CAP_MSGS = 2048
 SCALE_MSGS = 32768
@@ -104,4 +112,43 @@ def run(cache: Cache):
                      1e6 / c["throughput"],
                      f"thr={c['throughput']:.0f}msg/s "
                      f"rej={c['rejected']} blk={c['blocked']}"))
+
+    n_lanes = 4 if smoke else STACKED_LANES
+    stacked_msgs = SCALE_MSGS_SMOKE if smoke else None   # overflow default
+    # default jitter (unlike the parity cell): each lane's own jitter
+    # stream is what makes its admission realization diverge
+    stacked_params = dict(parity_params)
+    del stacked_params["jitter"]
+
+    def stacked_cell() -> dict:
+        import numpy as np
+
+        from repro.core.vectorized import run_many
+        t0 = time.time()
+        serial = [overflow_stress(
+            "dts", PARITY_NC, n_runs=1, seed=1000 * r,
+            engine="vectorized", total_messages=stacked_msgs,
+            **stacked_params)[0] for r in range(n_lanes)]
+        wall_serial = time.time() - t0
+        # the same cells as ONE lane-stacked engine run
+        t0 = time.time()
+        stacked = run_many([r.spec for r in serial])
+        wall_stacked = time.time() - t0
+        assert np.array_equal(serial[0].consume_times,
+                              stacked[0].consume_times)
+        rej = [int(r.rejected_publishes) for r in stacked]
+        return {"wall_serial": wall_serial, "wall_stacked": wall_stacked,
+                "speedup": wall_serial / wall_stacked, "n_lanes": n_lanes,
+                "rej_min": min(rej), "rej_max": max(rej)}
+
+    c = cache.get_or(
+        cache_key(f"overflow|stacked|dts|{PARITY_NC}|l{n_lanes}"
+                  f"|{stacked_msgs}", engine="vectorized",
+                  **stacked_params), stacked_cell)
+    rows.append((f"overflow/stacked/dts/c{PARITY_NC}/l{n_lanes}",
+                 c["wall_stacked"] * 1e6 / max(1, c["n_lanes"]),
+                 f"speedup={c['speedup']:.2f}x (serial "
+                 f"{c['wall_serial']:.1f}s stacked "
+                 f"{c['wall_stacked']:.1f}s) "
+                 f"rej/lane=[{c['rej_min']},{c['rej_max']}]"))
     return rows

@@ -54,7 +54,12 @@ MODULES = [
     ("campaign", bench_campaign),
 ]
 
-#: --campaign demo: a small paper-style grid (Fig 6 slice + tenants)
+#: --campaign demo: a small paper-style grid (Fig 6 slice + tenants),
+#: including one overflow-regime cell (the dts/4-consumer cell gets a
+#: tight 256-message queue cap + the overflow stress knobs, so the
+#: demo exercises the lane-resolved stacked flow-control path — the
+#: grid's per-queue volume is 2048/2 = 1024 messages, well past the
+#: cap, and the 3 seed lanes stack through one batched run)
 DEMO_CAMPAIGN = {
     "name": "demo",
     "patterns": ["feedback"],
@@ -63,6 +68,11 @@ DEMO_CAMPAIGN = {
     "consumers": [4, 8],
     "n_runs": 3,
     "total_messages": 2048,
+    "cell_params": [
+        [{"arch": "dts", "n_consumers": 4},
+         {"confirm_window": 64, "prefetch": 16, "ack_batch": 4,
+          "consumer_proc_s": 2e-3, "queue_max_bytes": 256 * 16384}],
+    ],
 }
 
 

@@ -19,9 +19,11 @@ cell-at-a-time orchestration.  This module executes whole grids as
   ``benchmarks.common.Cache``-compatible object: a ``data`` dict plus
   ``save()``), so an interrupted campaign resumes where it stopped and
   an engine/params change can never serve stale numbers;
-* cells the batched path cannot host (heap engine, explicit
-  ``queue_max_bytes`` overflow regimes) fall back to per-cell execution
-  automatically.
+* overflow-regime cells (explicit ``queue_max_bytes`` caps,
+  credit-flow-reachable publish surpluses) batch like everything else —
+  flow control is lane-resolved in the stacked engine, so every seed
+  lane carries its own reject/block accounting; only heap-engine cells
+  fall back to per-cell execution.
 
 Quick start::
 

@@ -179,8 +179,14 @@ class RunResult:
     rtts: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(0))
     publish_starts: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
+    #: basic.reject events observed by producers (reject-publish
+    #: overflow).  In a stacked multi-seed vectorized run this is the
+    #: *lane's own* count — each lane runs its own admission sequence
+    #: against its own credit backlog and depart cursor.
     rejected_publishes: int = 0
-    blocked_confirms: int = 0       # confirms withheld by credit-flow
+    #: confirms withheld by credit-flow; lane-resolved like
+    #: ``rejected_publishes`` in stacked runs
+    blocked_confirms: int = 0
     redelivered: int = 0
     sim_time: float = 0.0
     n_events: int = 0

@@ -49,6 +49,15 @@ Key ideas
   path as a retry cohort after ``publish_retry_s`` — the producer
   re-publish backoff — repeating until the drain admits it.  Reply
   publishes get the same treatment on reply/gather queues.
+* **Lane-resolved flow control.**  In stacked multi-seed execution every
+  piece of flow-control state is per-lane: credit backlogs, depart
+  cursors (one min-heap per lane, keyed by that lane's own clock),
+  byte-capped admission, reject-retry cadences, deferred-confirm
+  resume clocks and the rejected/blocked counters.  Scheduling stays
+  the pilot's (a member joins a retry cohort iff lane 0 rejected it),
+  but each lane's admission arithmetic is the exact solo sequence run
+  against its own clocks — so overflow-regime cells stack, and each
+  lane's counters are its own, not clones of the pilot's.
 * **Utilization-triggered finer interleaving.**  A static bottleneck
   analysis of the hop graph estimates each shared DSN-side pipe's
   (``dsn_*``, ``tunnel``) utilization at the configured demand.  When one
@@ -263,8 +272,10 @@ class VectorizedStreamSim:
                         if self.p.consumer_proc_s is not None
                         else spec.workload.proc_time_s())
         self.n_events = 0
-        self.rejected = 0
-        self.blocked = 0
+        #: per-lane flow-control counters (lane 0 = the pilot = the solo
+        #: run's values); scalars in RunResult come from the lane's entry
+        self.rejected = np.zeros(self._lanes, dtype=np.int64)
+        self.blocked = np.zeros(self._lanes, dtype=np.int64)
         self._path_cache: dict = {}
         self._align_cache: dict = {}
         self._combo_cache: dict = {}
@@ -343,9 +354,9 @@ class VectorizedStreamSim:
         True when producers can pile a queue's backlog past its credit
         threshold, or a byte cap sits below the per-queue volume.  Used
         by the auto ``vec_round`` heuristic (drop to per-message rounds
-        at the blocking boundary) and by :func:`run_many` to refuse
-        stacking — stacked lanes share the pilot's admission decisions,
-        so flow-control counters would not be lane-resolved."""
+        at the blocking boundary).  Since flow control became
+        lane-resolved, :func:`run_many` stacks these cells like any
+        other — this probe no longer gates stacking."""
         spec, p = self.spec, self.p
         size = spec.workload.payload_bytes
         cap = (p.queue_max_bytes // size) if p.queue_max_bytes else None
@@ -478,7 +489,10 @@ class VectorizedStreamSim:
             return self.rng.uniform(-j, j, n) if j else np.zeros(n)
         if not j:
             return np.zeros((n, self._lanes))
-        return np.stack([g.uniform(-j, j, n) for g in self._rngs], axis=1)
+        out = np.empty((n, self._lanes))
+        for lane, g in enumerate(self._rngs):
+            out[:, lane] = g.uniform(-j, j, n)
+        return out
 
     def _recv_latency(self, size: int) -> float:
         return self.arch.recv_latency_s(size)
@@ -546,123 +560,234 @@ class VectorizedStreamSim:
 
         Beyond the pump state (consumers + pending segments), queues whose
         publishers are subject to credit flow or whose byte budget can
-        overflow track their un-drained backlog: ``n_enq`` counts
-        enqueues, released depart times sit in a min-heap and are popped
-        (in time order) into ``departed`` as the backlog is queried — so
-        ``n_enq - departed`` is the ready count at the query time, exactly
-        the heap broker's ``len(q.ready)``."""
+        overflow track their un-drained backlog **per lane**: ``n_enq[l]``
+        counts lane ``l``'s enqueues, released depart times sit in one
+        min-heap per lane (keyed by that lane's own clock) and are popped
+        (in time order) into ``departed[l]`` as the backlog is queried —
+        so ``n_enq[l] - departed[l]`` is lane ``l``'s ready count at the
+        query time, exactly the heap broker's ``len(q.ready)`` in that
+        lane's solo run.  ``hwm[l]`` records the admission path's
+        backlog high-water mark (exact in the slow path, the zero-drain
+        upper bound in the fast path) — the invariant ``hwm <= cap`` is
+        property-tested.  ``released`` counts recorded depart *entries*
+        (each entry carries every lane), shared across lanes."""
         q = self._queues.get(qkey)
         if q is None:
+            L = self._lanes
             q = {"consumers": [int(c) for c in consumers], "pending": [],
                  "size": size, "credit": credit, "cap": cap_msgs,
                  "track": credit is not None or cap_msgs is not None,
-                 "n_enq": 0, "released": 0, "departed": 0,
-                 "depart_heap": [], "last_pop_t": 0.0, "deferred": []}
+                 "n_enq": np.zeros(L, dtype=np.int64), "released": 0,
+                 "departed": np.zeros(L, dtype=np.int64),
+                 "depart_heap": [[] for _ in range(L)],
+                 "last_pop_t": np.zeros(L), "deferred": [],
+                 "hwm": np.zeros(L, dtype=np.int64),
+                 "forced": np.zeros(L, dtype=np.int64)}
             self._queues[qkey] = q
             for c in q["consumers"]:
                 self._chan_queue[c] = qkey
         return q
 
-    def _pop_departs(self, q: dict, t: float) -> None:
-        """Advance the depart cursor: count releases that left by ``t``
-        (pilot-lane clock in stacked mode)."""
-        h = q["depart_heap"]
-        if self._lanes == 1:
-            while h and h[0] <= t:
-                q["last_pop_t"] = heapq.heappop(h)
-                q["departed"] += 1
-        else:
-            while h and h[0][0] <= t:
-                q["last_pop_t"] = heapq.heappop(h)[2]
-                q["departed"] += 1
+    def _pop_lane(self, q: dict, lane: int, t: float) -> None:
+        """Advance one lane's depart cursor: count that lane's releases
+        that left by ``t`` (the lane's own clock)."""
+        h = q["depart_heap"][lane]
+        while h and h[0] <= t:
+            q["last_pop_t"][lane] = heapq.heappop(h)
+            q["departed"][lane] += 1
 
     def _record_departs(self, q: dict, departs: np.ndarray) -> None:
-        """Register released deliveries' depart times; resolves any
-        credit-flow-deferred confirms the new drains now admit."""
+        """Register released deliveries' depart times (each lane's column
+        into that lane's heap); resolves any credit-flow-deferred
+        confirms the new drains now admit."""
         if not q["track"]:
             return
-        h = q["depart_heap"]
-        if self._lanes == 1:
-            for d in departs:
+        heaps = q["depart_heap"]
+        cols = departs.reshape(departs.shape[0], self._lanes)
+        for lane in range(self._lanes):
+            h = heaps[lane]
+            for d in cols[:, lane]:
                 heapq.heappush(h, float(d))
-        else:
-            # keyed by the pilot lane; per-lane depart vectors ride along
-            for d in departs:
-                heapq.heappush(h, (float(d[0]), next(self._seq), d))
         q["released"] += departs.shape[0]
         if q["deferred"]:
             self._try_resume(q)
 
+    def _lane_resume_time(self, q: dict, lane: int) -> float:
+        """One lane's ``flow_resume`` clock: pop that lane's departs
+        until it has drained to half the credit threshold (best effort —
+        with no further known drains the last release stands) and return
+        the crossing depart time + control latency."""
+        target = q["n_enq"][lane] - q["credit"] // 2
+        h = q["depart_heap"][lane]
+        while q["departed"][lane] < target and h:
+            q["last_pop_t"][lane] = heapq.heappop(h)
+            q["departed"][lane] += 1
+        return float(q["last_pop_t"][lane]) + self.arch.control_latency_s()
+
     def _try_resume(self, q: dict, force: bool = False) -> bool:
         """Release the queue's withheld confirms once drained to half the
         credit threshold (the heap broker's ``flow_resume``), at the
-        depart time that crossed the mark + control latency."""
+        depart time that crossed the mark + control latency.
+
+        Scheduling is the pilot's: the gate and the resume clock passed
+        to the resolvers are lane 0's; a resolver for a multi-lane
+        deferral computes the other blocked lanes' resume clocks from
+        their own depart heaps (:meth:`_lane_resume_time`) when it
+        fires."""
         if not q["deferred"]:
             return False
-        target = q["n_enq"] - q["credit"] // 2
+        target = int(q["n_enq"][0]) - q["credit"] // 2
         if q["released"] < target and not force:
             return False
-        while q["departed"] < target and q["depart_heap"]:
-            popped = heapq.heappop(q["depart_heap"])
-            q["last_pop_t"] = popped if self._lanes == 1 else popped[2]
-            q["departed"] += 1
-        t_resume = q["last_pop_t"] + self.arch.control_latency_s()
+        h = q["depart_heap"][0]
+        while q["departed"][0] < target and h:
+            q["last_pop_t"][0] = heapq.heappop(h)
+            q["departed"][0] += 1
+        t_resume = float(q["last_pop_t"][0]) + self.arch.control_latency_s()
         resolvers, q["deferred"] = q["deferred"], []
         for fn in resolvers:
             fn(t_resume)
         return True
 
-    def _enqueue_batch(self, qs: list, t_enq: np.ndarray
-                       ) -> tuple[np.ndarray, list]:
-        """Admit a publish cohort onto one queue (or atomically onto all
-        fanout targets).  Returns ``(accepted_mask, blocked_on)`` where
-        ``blocked_on[k]`` is the queue whose credit threshold message
-        ``k`` crossed (None when its confirm may fire immediately).
+    def _lane_admit(self, tracked: list, lane: int, t_rej: float
+                    ) -> tuple[float, int, Optional[dict]]:
+        """Resolve one non-pilot lane's reject-retry loop locally: the
+        lane's producer re-publishes every ``publish_retry_s`` until the
+        lane's own backlog admits the message (checked against the
+        lane's depart heap — the drains this lane has already computed).
+        The re-publish transits themselves are not re-served through the
+        lane's resources (the member's schedule is the pilot's); the
+        admission *time* and the per-attempt reject counts are the
+        lane's own.  Called after the lane's attempt at ``t_rej`` was
+        already rejected (and counted).  Returns ``(t_admit,
+        extra_rejects, blocked_on)``; with no further known drains the
+        next attempt is admitted optimistically."""
+        p = self.p
+        t = t_rej + p.publish_retry_s
+        extra = 0
+        while True:
+            full_q = None
+            for q in tracked:
+                self._pop_lane(q, lane, t)
+                if (q["cap"] is not None
+                        and q["n_enq"][lane] - q["departed"][lane]
+                        >= q["cap"]):
+                    full_q = q
+                    break
+            if full_q is None:
+                break
+            h = full_q["depart_heap"][lane]
+            if not h:
+                # no known future drain: count this failed attempt and
+                # admit on the next one rather than spinning forever —
+                # the one admission that may push a lane's backlog past
+                # the cap, recorded in ``forced`` (the property suite
+                # bounds hwm by cap + forced)
+                extra += 1
+                t += p.publish_retry_s
+                for q in tracked:
+                    q["forced"][lane] += 1
+                break
+            # every retry until the next known drain fails too: jump the
+            # retry cadence straight past it
+            k = max(1, int(np.ceil((h[0] - t) / p.publish_retry_s)))
+            extra += k
+            t += k * p.publish_retry_s
+        blocked_on = None
+        for q in tracked:
+            q["n_enq"][lane] += 1
+            q["hwm"][lane] = max(q["hwm"][lane],
+                                 q["n_enq"][lane] - q["departed"][lane])
+        for q in tracked:
+            if (q["credit"] is not None
+                    and q["n_enq"][lane] - q["departed"][lane]
+                    > q["credit"]):
+                blocked_on = q
+                break
+        return t, extra, blocked_on
 
-        Fast path: when even a zero-drain upper bound on every target's
-        backlog stays below both the byte cap and the credit threshold,
-        the whole cohort is admitted without per-message accounting."""
+    def _enqueue_batch(self, qs: list, t_enq: np.ndarray,
+                       skip: Optional[np.ndarray] = None
+                       ) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """Admit a publish cohort onto one queue (or atomically onto all
+        fanout targets), independently per lane.  ``t_enq`` is ``(n,)``
+        solo or ``(n, lanes)``; ``skip[k, l]`` marks members a previous
+        attempt already admitted in lane ``l`` (they are neither
+        re-enqueued nor re-counted).  Returns ``(accepted, blocked_on)``:
+        ``accepted[k, l]`` — admitted in lane ``l`` by *this* attempt;
+        ``blocked_on`` — ``None`` when no lane crossed a credit
+        threshold, else an ``(n, lanes)`` object array whose entries name
+        the queue whose threshold that member crossed in that lane.
+
+        Each lane runs the exact solo admission sequence against its own
+        clocks and depart cursor: a fast path when even a zero-drain
+        upper bound on every target's backlog stays below both the byte
+        cap and the credit threshold, else the per-message arrival-order
+        walk (the heap engine's ``offer()``/``flow_blocked`` sequence).
+        Lanes choose fast/slow independently, so a lane near its
+        threshold never drags the others onto the slow path (and the
+        pilot's arithmetic stays bit-identical to a solo run)."""
+        L = self._lanes
         n = t_enq.shape[0]
-        none_blocked = [None] * n
+        T = t_enq.reshape(n, L)
         tracked = [q for q in qs if q["track"]]
         if not tracked:
-            return np.ones(n, dtype=bool), none_blocked
-        t_min = float(_lane0(t_enq).min())
-        fast = True
-        for q in tracked:
-            self._pop_departs(q, t_min)
-            hi = q["n_enq"] + n - q["departed"]
-            if ((q["cap"] is not None and hi > q["cap"])
-                    or (q["credit"] is not None and hi > q["credit"])):
-                fast = False
-                break
-        if fast:
-            for q in tracked:
-                q["n_enq"] += n
-            return np.ones(n, dtype=bool), none_blocked
-        # slow path: arrival order, time-resolved backlog per target —
-        # the heap engine's per-message offer()/flow_blocked sequence
-        accept = np.zeros(n, dtype=bool)
-        blocked_on = none_blocked
-        for k in np.argsort(_lane0(t_enq), kind="stable"):
-            t = float(_lane0(t_enq)[k])
-            full = False
-            for q in tracked:
-                self._pop_departs(q, t)
-                if (q["cap"] is not None
-                        and q["n_enq"] - q["departed"] >= q["cap"]):
-                    full = True
-                    break
-            if full:
+            acc = np.ones((n, L), dtype=bool)
+            if skip is not None:
+                acc &= ~skip
+            return acc, None
+        accept = np.zeros((n, L), dtype=bool)
+        blocked_on: Optional[np.ndarray] = None
+        for lane in range(L):
+            att = (np.ones(n, dtype=bool) if skip is None
+                   else ~skip[:, lane])
+            n_att = int(att.sum())
+            if n_att == 0:
                 continue
-            accept[k] = True
+            tl = T[att, lane]
+            t_min = float(tl.min())
+            fast = True
             for q in tracked:
-                q["n_enq"] += 1
-            for q in tracked:
-                if (q["credit"] is not None
-                        and q["n_enq"] - q["departed"] > q["credit"]):
-                    blocked_on[k] = q
+                self._pop_lane(q, lane, t_min)
+                hi = q["n_enq"][lane] + n_att - q["departed"][lane]
+                if ((q["cap"] is not None and hi > q["cap"])
+                        or (q["credit"] is not None and hi > q["credit"])):
+                    fast = False
                     break
+            if fast:
+                for q in tracked:
+                    q["n_enq"][lane] += n_att
+                    q["hwm"][lane] = max(
+                        q["hwm"][lane],
+                        q["n_enq"][lane] - q["departed"][lane])
+                accept[att, lane] = True
+                continue
+            for k in np.nonzero(att)[0][np.argsort(tl, kind="stable")]:
+                t = float(T[k, lane])
+                full = False
+                for q in tracked:
+                    self._pop_lane(q, lane, t)
+                    if (q["cap"] is not None
+                            and q["n_enq"][lane] - q["departed"][lane]
+                            >= q["cap"]):
+                        full = True
+                        break
+                if full:
+                    continue
+                accept[k, lane] = True
+                for q in tracked:
+                    q["n_enq"][lane] += 1
+                    q["hwm"][lane] = max(
+                        q["hwm"][lane],
+                        q["n_enq"][lane] - q["departed"][lane])
+                for q in tracked:
+                    if (q["credit"] is not None
+                            and q["n_enq"][lane] - q["departed"][lane]
+                            > q["credit"]):
+                        if blocked_on is None:
+                            blocked_on = np.full((n, L), None, dtype=object)
+                        blocked_on[k, lane] = q
+                        break
         return accept, blocked_on
 
     # -- batch event loop ------------------------------------------------------
@@ -1080,9 +1205,36 @@ class VectorizedStreamSim:
         ``deliver(group_key, members, t_enq)`` hands accepted members to
         the delivery pump; ``set_confirms(members, t_conf)`` /
         ``mark_confirmed(members)`` record resolved publisher confirms.
+
+        **Stacked lanes diverge here.**  Admission runs per lane
+        (:meth:`_enqueue_batch`), so a member may be admitted in one
+        lane and rejected in another.  Scheduling stays the pilot's: a
+        member joins a retry cohort iff *lane 0* rejected it (exactly
+        the pilot's solo retry schedule — lanes that already admitted it
+        keep their frozen admission times and ignore the re-served
+        transit); conversely a lane that rejects a pilot-admitted member
+        resolves its own retry cadence locally against its own depart
+        heap (:meth:`_lane_admit`).  Confirm times, credit blocks and
+        reject counts are all per-lane; every lane's ``rejected`` /
+        ``blocked`` counters and clocks match what its solo run's
+        admission sequence would produce, up to the shared-schedule
+        approximation bounded by the stacked-overflow parity tests.
         """
         p = self.p
         ctrl = self.arch.control_latency_s()
+        L = self._lanes
+        solo = L == 1
+        n_state = int(members.max()) + 1 if members.size else 0
+        #: per-member per-lane admission state, indexed by member value:
+        #: admission time (NaN until admitted), admitted flag, and the
+        #: queue whose credit threshold the admission crossed (if any)
+        st_t = np.full((n_state, L), np.nan)
+        st_in = np.zeros((n_state, L), dtype=bool)
+        st_blk = np.full((n_state, L), None, dtype=object)
+
+        def out(a: np.ndarray) -> np.ndarray:
+            """Engine-facing view of an ``(m, L)`` time array."""
+            return a[:, 0] if solo else a
 
         def attempt(mem: np.ndarray, t_arr: np.ndarray) -> None:
             def part(mb: np.ndarray, t_enq: np.ndarray) -> None:
@@ -1092,47 +1244,91 @@ class VectorizedStreamSim:
                                on_part=part)
 
         def land(mem: np.ndarray, t_enq: np.ndarray) -> None:
+            T = t_enq.reshape(mem.size, L)
             for gkey, queues, pos in groups_of(mem):
-                acc, blocked_on = self._enqueue_batch(queues, t_enq[pos])
-                rej = np.nonzero(~acc)[0]
+                sub = mem[pos]
+                already = st_in[sub]
+                t_use = np.where(already, st_t[sub], T[pos])
+                acc, blocked_on = self._enqueue_batch(queues, t_use,
+                                                      skip=already)
+                st_t[sub] = np.where(acc, t_use, st_t[sub])
+                in_now = already | acc
+                st_in[sub] = in_now
+                if blocked_on is not None:
+                    blk_mask = np.not_equal(blocked_on, None)
+                    for r, lane in zip(*np.nonzero(blk_mask)):
+                        st_blk[sub[r], lane] = blocked_on[r, lane]
+                    self.blocked += blk_mask.sum(axis=0)
+                # attempted lanes that stayed out: one reject each
+                self.rejected += (~already & ~in_now).sum(axis=0)
+                pilot_in = in_now[:, 0]
+                rej = np.nonzero(~pilot_in)[0]
                 if rej.size:
-                    self.rejected += rej.size
-                    attempt(mem[pos[rej]],
-                            t_enq[pos[rej]] + p.publish_retry_s)
-                ok = np.nonzero(acc)[0]
+                    attempt(sub[rej], out(t_use[rej]) + p.publish_retry_s)
+                ok = np.nonzero(pilot_in)[0]
                 if ok.size == 0:
                     continue
+                if not solo:
+                    # pilot admitted: the member's schedule is fixed;
+                    # lanes that still rejected it resolve their retry
+                    # cadence locally against their own depart cursor
+                    tracked = [q for q in queues if q["track"]]
+                    for k in ok:
+                        for lane in np.nonzero(~in_now[k, 1:])[0] + 1:
+                            t_adm, extra, bq = self._lane_admit(
+                                tracked, lane, float(t_use[k, lane]))
+                            self.rejected[lane] += extra
+                            st_t[sub[k], lane] = t_adm
+                            st_in[sub[k], lane] = True
+                            if bq is not None:
+                                st_blk[sub[k], lane] = bq
+                                self.blocked[lane] += 1
+                t_fin = st_t[sub]
                 if set_confirms is None:
-                    deliver(gkey, mem[pos[ok]], t_enq[pos[ok]])
+                    deliver(gkey, sub[ok], out(t_fin[ok]))
                     continue
-                if acc.all() and not any(blocked_on):
-                    # hot path (no reject, no credit event): bulk
-                    # confirms, one prefix advance
-                    set_confirms(mem[pos], t_enq[pos] + ctrl)
-                    deliver(gkey, mem[pos], t_enq[pos])
-                    mark_confirmed(mem[pos])
+                if bool(acc.all()) and blocked_on is None:
+                    # hot path (no reject, no credit event, anywhere):
+                    # bulk confirms, one prefix advance
+                    set_confirms(sub, out(t_fin) + ctrl)
+                    deliver(gkey, sub, out(t_fin))
+                    mark_confirmed(sub)
                     continue
                 now = []
                 any_deferred = None
                 for k in ok:
-                    mk = int(mem[pos[k]])
-                    bq = blocked_on[k]
-                    if bq is None:
-                        set_confirms(np.array([mk]),
-                                     np.array([t_enq[pos[k]] + ctrl]))
+                    mk = int(sub[k])
+                    tc = t_fin[k] + ctrl
+                    blk = st_blk[mk]
+                    if blk[0] is None:
+                        # non-pilot blocked lanes: best-effort resume
+                        # clock from the lane's own depart heap, now
+                        for lane in range(1, L):
+                            if blk[lane] is not None:
+                                tc[lane] = max(tc[lane],
+                                               self._lane_resume_time(
+                                                   blk[lane], lane))
+                        set_confirms(np.array([mk]), out(tc[None, :]))
                         now.append(mk)
                     else:
                         # credit flow: withhold this confirm until the
-                        # pump drains the queue to flow_resume
-                        self.blocked += 1
-                        any_deferred = bq
+                        # pump drains the pilot's queue to flow_resume;
+                        # other blocked lanes read their own resume
+                        # clocks when the resolver fires
+                        any_deferred = blk[0]
 
-                        def setter(t_conf, mk=mk):
-                            set_confirms(np.array([mk]),
-                                         np.array([t_conf]))
+                        def resolver(t_res, mk=mk, tc=tc, blk=blk):
+                            tv = tc.copy()
+                            tv[0] = t_res
+                            for lane in range(1, L):
+                                if blk[lane] is not None:
+                                    tv[lane] = max(
+                                        tv[lane], self._lane_resume_time(
+                                            blk[lane], lane))
+                            set_confirms(np.array([mk]), out(tv[None, :]))
                             mark_confirmed(np.array([mk]))
-                        bq["deferred"].append(setter)
-                deliver(gkey, mem[pos[ok]], t_enq[pos[ok]])
+                        blk[0]["deferred"].append(resolver)
+                deliver(gkey, sub[ok], out(t_fin[ok]))
                 if now:
                     mark_confirmed(np.asarray(now, dtype=int))
                 if any_deferred is not None:
@@ -1347,6 +1543,7 @@ class VectorizedStreamSim:
         advance_pubs()
         self._fin_consume, self._fin_rtts = consume_t, rtts
         self._fin_pub = pub_start
+        self._fin_confirms = confirms
 
     # -- broadcast (+ gather) --------------------------------------------------
     def _setup_broadcast(self, gather: bool) -> None:
@@ -1501,6 +1698,7 @@ class VectorizedStreamSim:
         advance_pubs()
         self._fin_consume, self._fin_rtts = consume_t, rtts
         self._fin_pub = pub_start
+        self._fin_confirms = confirms
 
     # -- shared result assembly ------------------------------------------------
     def _finalize(self) -> RunResult:
@@ -1512,9 +1710,11 @@ class VectorizedStreamSim:
 
     def _finalize_stacked(self) -> list:
         """Per-lane results of a stacked run: lane ``s`` is the cell run
-        with ``stack_seeds[s]``.  The flow-control counters and event
-        count are scheduling-level quantities shared by all lanes (the
-        pilot's decisions), so every lane reports the same values."""
+        with ``stack_seeds[s]``.  Flow-control counters (rejected /
+        blocked confirms) are lane-resolved — each lane's own admission
+        decisions against its own credit backlog and depart cursor; only
+        the event count is a scheduling-level quantity shared by all
+        lanes (the pilot's cohorts)."""
         import dataclasses
         pub = self._fin_pub.reshape(-1, self._lanes)
         out = []
@@ -1524,7 +1724,7 @@ class VectorizedStreamSim:
             out.append(self._result(
                 spec_s, self._fin_consume[:, s],
                 None if self._fin_rtts is None else self._fin_rtts[:, s],
-                pub[:, s]))
+                pub[:, s], lane=s))
         return out
 
     def run_stacked(self) -> list:
@@ -1533,15 +1733,19 @@ class VectorizedStreamSim:
 
         The pilot lane (``stack_seeds[0]``) is bit-identical to a solo
         :meth:`run` of the same spec — it drives every scheduling
-        decision with its own clock.  The other lanes run the *same
-        schedule* (cohort splits, delivery assignment, chunk boundaries)
-        with their own jitter streams, resources and FIFO carries; their
-        deviation from a solo run is bounded by the same ordering-slack
-        class of approximation as ``vec_horizon_s`` and stays well under
-        1% on aggregate summaries (see tests/test_campaign.py).  Avoid
-        stacking for overflow-regime cells: admission decisions are the
-        pilot's, so per-lane rejected/blocked counters are not
-        lane-resolved."""
+        decision with its own clock, including every broker admission
+        decision (reject-publish, credit blocking).  The other lanes run
+        the *same schedule* (cohort splits, delivery assignment, chunk
+        boundaries) with their own jitter streams, resources, FIFO
+        carries, **and their own flow-control accounting**: per-lane
+        credit backlogs, depart cursors, reject-retry cadences and
+        deferred-confirm clocks (see :meth:`_publish_with_retry`), so
+        per-lane rejected/blocked counters are lane-resolved even in the
+        overflow regime.  Non-overflow lanes deviate from a solo run by
+        the same ordering-slack class of approximation as
+        ``vec_horizon_s`` (well under 1% on aggregate summaries, see
+        tests/test_campaign.py); overflow-regime lanes stay within 5% of
+        their solo heap runs (tests/test_engine_parity.py)."""
         if self._lanes == 1:
             return [self.run()]
         self._setup()
@@ -1550,7 +1754,7 @@ class VectorizedStreamSim:
 
     def _result(self, spec: ExperimentSpec, consume_t: np.ndarray,
                 rtts: Optional[np.ndarray],
-                pub_start: np.ndarray) -> RunResult:
+                pub_start: np.ndarray, lane: int = 0) -> RunResult:
         # arrays are indexed pr*per_producer + i (work patterns) or
         # c*per_producer + i (broadcast), so producer attribution falls
         # out of the finite-entry indices
@@ -1574,8 +1778,8 @@ class VectorizedStreamSim:
             consume_times=consume_t,
             rtts=r,
             publish_starts=np.sort(pub_start),
-            rejected_publishes=self.rejected,
-            blocked_confirms=self.blocked,
+            rejected_publishes=int(self.rejected[lane]),
+            blocked_confirms=int(self.blocked[lane]),
             redelivered=0,
             sim_time=top, n_events=self.n_events,
             consume_producers=cp, rtt_producers=rp)
@@ -1612,14 +1816,12 @@ def run_many(specs, inventory=None) -> list:
     grouped and pushed through one :meth:`VectorizedStreamSim.run_stacked`
     event loop as stacked cohort lanes — the batched run costs barely
     more than a single solo run, instead of ``n_seeds`` times as much.
-    Heterogeneous cells (different pattern/arch/consumer-count/knobs)
-    fall back to per-cell solo execution.  Cells where broker
-    flow-control events are reachable (an explicit ``queue_max_bytes``
-    cap, or a publish surplus that can hit the credit threshold — see
-    :meth:`VectorizedStreamSim.flow_events_possible`) are never
-    stacked: admission decisions in a stacked run follow the pilot
-    lane, so the per-lane reject/block counters would not be
-    lane-resolved.
+    This includes overflow-regime cells (explicit ``queue_max_bytes``
+    caps, credit-flow-reachable publish surpluses): flow control is
+    lane-resolved, so each lane carries its own reject/block counters
+    and admission clocks.  Only heterogeneous cells (different
+    pattern/arch/consumer-count/knobs) and heap-engine cells fall back
+    to per-cell solo execution.
 
     Infeasible specs come back as ``feasible=False`` results, like
     :func:`~repro.core.simulator.run_experiment`.  Returns one
@@ -1628,26 +1830,22 @@ def run_many(specs, inventory=None) -> list:
     results: list = [None] * len(specs)
     groups: dict = {}
     for i, spec in enumerate(specs):
-        if (spec.params.engine == "vectorized"
-                and spec.params.queue_max_bytes is None):
+        if spec.params.engine == "vectorized":
             groups.setdefault(_stack_key(spec), []).append(i)
         else:
             groups[("solo", i)] = [i]
     for idxs in groups.values():
         stack = len(idxs) > 1
         if stack:
-            # one probe per group: feasibility and flow-event
-            # reachability are structural, identical across the seeds
+            # one probe per group: feasibility is structural, identical
+            # across the seeds
             try:
-                probe = VectorizedStreamSim(specs[idxs[0]], inventory)
+                VectorizedStreamSim(specs[idxs[0]], inventory)
             except InfeasibleConfiguration as e:
                 for i in idxs:
                     results[i] = RunResult(spec=specs[i], feasible=False,
                                            infeasible_reason=str(e))
                 continue
-            # credit-flow blocking is reachable even without a byte
-            # cap: keep admission decisions lane-resolved
-            stack = not probe.flow_events_possible()
         if not stack:
             for i in idxs:
                 results[i] = run_experiment(specs[i], inventory)

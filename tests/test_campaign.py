@@ -1,9 +1,12 @@
 """Campaign layer: stacked multi-seed engine runs (run_many /
 run_stacked), the declarative grid runner, and its fingerprinted cache
 resume.  The stacking contract under test: the pilot lane is
-bit-identical to a solo run, every lane conserves messages, and
-non-pilot lanes' summaries stay within a small tolerance of their solo
-equivalents (the schedule is the pilot's; the arithmetic is per-lane)."""
+bit-identical to a solo run (including its flow-control counters),
+every lane conserves messages, non-pilot lanes' summaries stay within a
+small tolerance of their solo equivalents (the schedule is the pilot's;
+the arithmetic — including credit-backlog accounting, byte-capped
+admission and reject-retry cadences — is per-lane), and overflow-regime
+cells stack like everything else."""
 
 import numpy as np
 import pytest
@@ -74,38 +77,82 @@ def test_run_many_mixed_and_fallbacks():
     assert np.array_equal(out[2].consume_times, ref.consume_times)
 
 
-def test_overflow_cells_never_stacked():
-    """Admission decisions in a stacked run follow the pilot, so cells
-    with an explicit byte cap (overflow regime) must run solo — their
-    per-lane reject counters match per-cell execution exactly."""
+def _overflow_specs(msgs=1024, cap_msgs=96, seeds=SEEDS):
     from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
     wl = get_workload("dstream")
-    cap = 96 * wl.payload_bytes
-    specs = [ExperimentSpec(
+    return [ExperimentSpec(
         pattern="feedback", workload=wl, arch="dts", n_producers=2,
-        n_consumers=2, total_messages=2048,
-        params=SimParams(seed=s, queue_max_bytes=cap,
-                         **OVERFLOW_STRESS_DEFAULTS)) for s in SEEDS]
+        n_consumers=2, total_messages=msgs,
+        params=SimParams(seed=s, queue_max_bytes=cap_msgs * wl.payload_bytes,
+                         **OVERFLOW_STRESS_DEFAULTS)) for s in seeds]
+
+
+def test_overflow_cells_stack_lane_resolved():
+    """Overflow-regime cells stack like everything else: the pilot lane
+    reproduces its solo run bit-for-bit (admission decisions included),
+    and each other lane carries its *own* reject accounting — its own
+    clocks and jitter, not a clone of the pilot's counters."""
+    specs = _overflow_specs()
     stacked = run_many(specs)
-    for s, r in zip(SEEDS, stacked):
-        solo = run_experiment(specs[SEEDS.index(s)])
-        assert r.rejected_publishes == solo.rejected_publishes > 0
-        assert np.array_equal(r.consume_times, solo.consume_times)
+    solo = run_experiment(specs[0])
+    assert stacked[0].rejected_publishes == solo.rejected_publishes > 0
+    assert np.array_equal(stacked[0].consume_times, solo.consume_times)
+    assert np.array_equal(stacked[0].rtts, solo.rtts)
+    for r in stacked:
+        assert r.feasible and r.n_consumed == specs[0].total_messages
+        assert r.rejected_publishes > 0
+    # non-pilot lanes genuinely diverge (their own jitter streams drive
+    # their own admission clocks)
+    for r in stacked[1:]:
+        assert not np.array_equal(r.consume_times, stacked[0].consume_times)
 
 
-def test_credit_flow_cells_never_stacked():
+def test_credit_flow_cells_stack_lane_resolved():
     """Credit-flow blocking can fire without a byte cap (work queues
-    always track the credit threshold); those cells must also run solo
-    so the per-lane blocked_confirms counters stay lane-resolved."""
+    always track the credit threshold); those cells stack too, with the
+    pilot's blocked_confirms equal to its solo run and every lane
+    reporting its own count."""
     from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
     specs = [_spec(s, "feedback", nc=2, msgs=2048,
                    **OVERFLOW_STRESS_DEFAULTS) for s in SEEDS]
     stacked = run_many(specs)
-    for spec, r in zip(specs, stacked):
-        solo = run_experiment(spec)
-        assert solo.blocked_confirms > 0
-        assert r.blocked_confirms == solo.blocked_confirms
-        assert np.array_equal(r.consume_times, solo.consume_times)
+    solo = run_experiment(specs[0])
+    assert stacked[0].blocked_confirms == solo.blocked_confirms > 0
+    assert np.array_equal(stacked[0].consume_times, solo.consume_times)
+    for r in stacked:
+        assert r.feasible and r.n_consumed == 2048
+        assert r.blocked_confirms > 0
+
+
+def test_stack_seeds_single_lane_equals_solo_overflow():
+    """``stack_seeds=[s]`` must equal ``seed=s`` exactly, including on a
+    flow-control-reachable cell (the lane-resolved admission path
+    collapses to the solo path at one lane)."""
+    spec = _overflow_specs(seeds=(7,))[0]
+    solo = run_experiment(spec)
+    stacked = VectorizedStreamSim(spec, stack_seeds=[7]).run_stacked()
+    assert len(stacked) == 1
+    assert np.array_equal(solo.consume_times, stacked[0].consume_times)
+    assert np.array_equal(solo.rtts, stacked[0].rtts)
+    assert np.array_equal(solo.publish_starts, stacked[0].publish_starts)
+    assert solo.rejected_publishes == stacked[0].rejected_publishes > 0
+    assert solo.blocked_confirms == stacked[0].blocked_confirms
+
+
+def test_stacked_overflow_pilot_determinism_regression():
+    """Lane 0 of a stacked overflow run stays bit-identical to the solo
+    vectorized run — every scheduling *and admission* decision is the
+    pilot's own, no matter how many lanes ride along."""
+    specs = _overflow_specs(msgs=768, seeds=(0, 1000, 2000, 3000))
+    solo = run_experiment(specs[0])
+    pilot = VectorizedStreamSim(
+        specs[0], stack_seeds=[s.params.seed for s in specs]
+    ).run_stacked()[0]
+    assert np.array_equal(solo.consume_times, pilot.consume_times)
+    assert np.array_equal(solo.rtts, pilot.rtts)
+    assert np.array_equal(solo.publish_starts, pilot.publish_starts)
+    assert solo.rejected_publishes == pilot.rejected_publishes
+    assert solo.blocked_confirms == pilot.blocked_confirms
 
 
 def test_stacked_constructor_validation():

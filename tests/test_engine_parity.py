@@ -18,7 +18,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.metrics import overhead_vs_baseline, summarize
 from repro.core.patterns import (
-    average_summaries, overflow_stress, run_pattern)
+    OVERFLOW_STRESS_DEFAULTS, average_summaries, overflow_stress,
+    run_pattern)
 from repro.core.simulator import (
     ENGINES, SimConfig, SimParams, get_engine)
 from repro.core.vectorized import _fifo_scan
@@ -114,6 +115,46 @@ def test_overflow_regime_parity():
     assert v.blocked_confirms > 0
     assert _rel(h.rejected_publishes, v.rejected_publishes) < 0.25
     assert _rel(h.blocked_confirms, v.blocked_confirms) < 0.25
+
+
+def test_stacked_overflow_lanes_match_solo_heap():
+    """Stacked execution of an overflow-regime cell is lane-resolved:
+    every lane — not just the pilot — must land within tolerance of its
+    own solo *heap* run.  Summaries are tight (<=5%); the reject/block
+    counters are knife-edge threshold counts that swing with the jitter
+    realization in both engines, so they get a factor band plus a
+    hard nonzero requirement (both mechanisms must fire in every
+    lane)."""
+    from repro.core.simulator import ExperimentSpec, run_experiment
+    from repro.core.vectorized import run_many
+    from repro.core.workloads import get_workload
+    from repro.core.broker import ClassicQueue
+    wl = get_workload("dstream")
+    cap = int(ClassicQueue.FLOW_CREDIT * 4 * 1.06) * wl.payload_bytes
+    seeds = (0, 1000, 2000)
+
+    def spec(s, eng):
+        return ExperimentSpec(
+            pattern="feedback", workload=wl, arch="dts", n_producers=4,
+            n_consumers=4, total_messages=8192,
+            params=SimParams(seed=s, engine=eng, queue_max_bytes=cap,
+                             **OVERFLOW_STRESS_DEFAULTS))
+
+    stacked = run_many([spec(s, "vectorized") for s in seeds])
+    assert len({id(r) for r in stacked}) == 3
+    for s, v in zip(seeds, stacked):
+        h = run_experiment(spec(s, "heap"))
+        assert h.rejected_publishes > 0 and h.blocked_confirms > 0
+        assert v.n_consumed == h.n_consumed == 8192
+        hs, vs = summarize(h), summarize(v)
+        assert _rel(hs.throughput_msgs_s, vs.throughput_msgs_s) < 0.05, s
+        assert _rel(hs.median_rtt_s, vs.median_rtt_s) < 0.05, s
+        # lane-resolved counters: nonzero in every lane, same order of
+        # magnitude as the lane's own heap realization
+        assert v.rejected_publishes > 0 and v.blocked_confirms > 0
+        assert (0.3 < v.rejected_publishes / h.rejected_publishes
+                < 3.0), s
+        assert (0.5 < v.blocked_confirms / h.blocked_confirms < 2.0), s
 
 
 def test_overflow_guaranteed_delivery_both_engines():
