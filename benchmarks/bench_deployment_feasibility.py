@@ -1,0 +1,143 @@
+"""Cross-architecture deployment-feasibility study (paper §6).
+
+The paper argues *qualitatively* that MSS trades per-message overhead
+for multi-user deployment feasibility, DTS needs a per-user minimal-hop
+path, and PRS sits between.  This bench runs the quantitative version
+(`patterns.deployment_feasibility`): the same 1 -> 64 tenant sweep over
+all three deployment models —
+
+* ``dts`` — per-tenant dedicated S2DS tunnel pairs terminating on the
+  facility gateway (contention at the shared gateway NIC + per-tunnel
+  process overhead on the gateway host);
+* ``prs-haproxy`` — every tenant multiplexes the one shared proxy pair
+  ahead of per-tenant vhost queues;
+* ``mss`` — the managed LB + ingress + broker fabric.
+
+Rows: per (arch, tenant-count) cell, per-tenant throughput / RTT / Jain
+fairness / degradation vs the single-tenant deployment / shared-ingress
+utilization — plus
+
+* a per-arch heap-vs-vectorized parity cell on the smallest multi-
+  tenant point (the <= 5% engine contract on the new topology), and
+* the headline ``deploy/crossover`` row: the interpolated tenant count
+  where MSS's shared broker overtakes per-tenant DTS tunnels, and DTS's
+  ingress utilization there.
+
+``DEPLOY_BENCH_SMOKE=1`` shrinks the sweep for CI.  The same grid is
+also runnable through the campaign CLI: ``python -m benchmarks.run
+--campaign deployment`` (see :data:`DEPLOYMENT_CAMPAIGN`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks.common import Cache, cache_key, resolve_engine
+from repro.core.metrics import summarize
+from repro.core.patterns import DEPLOYMENT_ARCHS, deployment_feasibility
+from repro.core.simulator import ExperimentSpec, SimParams, run_experiment
+from repro.core.workloads import DSTREAM
+
+SMOKE = os.environ.get("DEPLOY_BENCH_SMOKE") == "1"
+
+if SMOKE:
+    TENANTS = (1, 4, 16, 64)
+    MSGS = 64
+    N_RUNS = 1
+else:
+    TENANTS = (1, 2, 4, 8, 16, 32, 64)
+    MSGS = 256
+    N_RUNS = 3
+# the parity cell stays the same in smoke mode: below ~100 messages per
+# tenant the throughput estimator's own noise exceeds the 5% band
+PARITY_TENANTS = 4
+PARITY_MSGS = 128
+
+#: the same three-arch tenant grid as a campaign spec
+#: (``python -m benchmarks.run --campaign deployment``): a fixed
+#: 16-client fleet partitioned into 1..16 tenants, so every
+#: (arch x tenants) cell's 3 seeds stack through one batched run
+DEPLOYMENT_CAMPAIGN = {
+    "name": "deployment",
+    "patterns": ["feedback"],
+    "architectures": list(DEPLOYMENT_ARCHS),
+    "workloads": ["dstream"],
+    "consumers": [16],
+    "tenants": [1, 2, 4, 8, 16],
+    "tenant_isolation": "vhost",
+    "n_runs": 3,
+    "total_messages": 2048,
+}
+
+
+def _study_cells() -> dict:
+    study = deployment_feasibility(
+        tenant_counts=TENANTS, messages_per_tenant=MSGS, n_runs=N_RUNS,
+        engine=resolve_engine(None))
+    return {
+        "curves": {arch: [dataclasses.asdict(p) for p in pts]
+                   for arch, pts in study.curves.items()},
+        "crossover_tenants": study.crossover_tenants,
+        "crossover_utilization": study.crossover_utilization,
+        "headline": study.headline(),
+    }
+
+
+def _parity_spec(arch: str, engine: str) -> ExperimentSpec:
+    T = PARITY_TENANTS
+    return ExperimentSpec(
+        pattern="feedback", workload=DSTREAM, arch=arch,
+        n_producers=T, n_consumers=T, total_messages=T * PARITY_MSGS,
+        params=SimParams(seed=0, engine=engine),
+        tenants=T, tenant_isolation="vhost")
+
+
+def _parity_cell() -> dict:
+    """Heap-vs-vectorized deviation on one multi-tenant cell per arch
+    (the <= 5% contract on the new tenant-aware topologies)."""
+    out = {}
+    for arch in DEPLOYMENT_ARCHS:
+        hs = summarize(run_experiment(_parity_spec(arch, "heap")))
+        vs = summarize(run_experiment(_parity_spec(arch, "vectorized")))
+        dev = max(
+            abs(vs.throughput_msgs_s - hs.throughput_msgs_s)
+            / hs.throughput_msgs_s,
+            abs(vs.median_rtt_s - hs.median_rtt_s) / hs.median_rtt_s)
+        out[arch] = dev
+        assert dev <= 0.05, (
+            f"multi-tenant {arch} heap/vec deviation {dev:.3f} > 5%")
+    return {"dev": out, "tenants": PARITY_TENANTS}
+
+
+def run(cache: Cache):
+    rows = []
+    tag = f"{'-'.join(map(str, TENANTS))}|m{MSGS}|r{N_RUNS}"
+    c = cache.get_or(cache_key(f"deploy|study|{tag}"), _study_cells)
+    for arch in DEPLOYMENT_ARCHS:
+        for p in c["curves"][arch]:
+            name = f"deploy/{arch}/t{p['tenants']}"
+            if not p["feasible"]:
+                rows.append((name, float("nan"), "INFEASIBLE"))
+                continue
+            thr = p["tenant_throughput_msgs_s"]
+            rows.append((name, 1e6 / thr if thr else float("nan"),
+                         f"thr/tenant={thr:.0f}msg/s "
+                         f"rtt={p['tenant_median_rtt_s'] * 1e3:.0f}ms "
+                         f"fairness={p['fairness']:.3f} "
+                         f"degradation={p['degradation']:.2f} "
+                         f"ingress_util={p['ingress_utilization']:.2f}"))
+
+    pk = cache_key(f"deploy|parity|t{PARITY_TENANTS}|m{PARITY_MSGS}")
+    pc = cache.get_or(pk, _parity_cell)
+    for arch, dev in pc["dev"].items():
+        rows.append((f"deploy/parity/{arch}/t{pc['tenants']}",
+                     float("nan"), f"heap_vs_vec_dev={100 * dev:.2f}%"))
+
+    ct = c["crossover_tenants"]
+    rows.append(("deploy/crossover", float("nan"),
+                 (f"crossover_tenants={ct:.1f} "
+                  f"dts_ingress_util={c['crossover_utilization']:.2f}"
+                  if ct == ct else "no-crossover-in-sweep")
+                 + f" :: {c['headline']}"))
+    return rows

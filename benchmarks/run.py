@@ -30,8 +30,8 @@ import sys
 import time
 
 from benchmarks import (
-    bench_campaign, bench_engine_scaling, bench_fig4_work_sharing,
-    bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
+    bench_campaign, bench_deployment_feasibility, bench_engine_scaling,
+    bench_fig4_work_sharing, bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
     bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
     bench_highspeed_projection, bench_kernels, bench_overflow_regime,
     bench_payload_sweep, bench_roofline, bench_table1_workloads)
@@ -52,6 +52,7 @@ MODULES = [
     ("engine_scaling", bench_engine_scaling),
     ("overflow_regime", bench_overflow_regime),
     ("campaign", bench_campaign),
+    ("deployment_feasibility", bench_deployment_feasibility),
 ]
 
 #: --campaign demo: a small paper-style grid (Fig 6 slice + tenants),
@@ -76,10 +77,19 @@ DEMO_CAMPAIGN = {
 }
 
 
+#: named campaign specs runnable as --campaign <name>
+NAMED_CAMPAIGNS = {
+    "demo": lambda: DEMO_CAMPAIGN,
+    # the §6 deployment-feasibility grid (three archs x tenant sweep)
+    "deployment": lambda: bench_deployment_feasibility.DEPLOYMENT_CAMPAIGN,
+}
+
+
 def run_campaign_cli(args, cache: Cache) -> None:
     from repro.core.campaign import CampaignSpec, run_campaign
-    if args.campaign == "demo":
-        spec = CampaignSpec.from_json(json.dumps(DEMO_CAMPAIGN))
+    if args.campaign in NAMED_CAMPAIGNS:
+        spec = CampaignSpec.from_json(
+            json.dumps(NAMED_CAMPAIGNS[args.campaign]()))
     else:
         with open(args.campaign) as f:
             spec = CampaignSpec.from_json(f.read())
@@ -103,8 +113,9 @@ def run_campaign_cli(args, cache: Cache) -> None:
     for s in res.averaged:
         us = (1e6 / s.throughput_msgs_s if s.feasible
               and s.throughput_msgs_s else float("nan"))
+        tenant_tag = f"/t{s.tenants}" if s.tenants > 1 else ""
         print(f"campaign/{spec.name}/{s.pattern}/{s.arch}/{s.workload}/"
-              f"c{s.n_consumers},{us:.1f},"
+              f"c{s.n_consumers}{tenant_tag},{us:.1f},"
               f"thr={s.throughput_msgs_s:.0f}msg/s n_runs={s.n_runs}")
 
 
@@ -117,7 +128,8 @@ def main() -> None:
                          "(default: the SimParams default, vectorized)")
     ap.add_argument("--campaign", default=None, metavar="SPEC",
                     help="execute a campaign grid: path to a "
-                         "CampaignSpec JSON file, or 'demo'")
+                         "CampaignSpec JSON file, or a named grid "
+                         "('demo', 'deployment')")
     ap.add_argument("--campaign-out", default=None, metavar="PATH",
                     help="where to write the campaign results JSON "
                          "(default results/campaign_<name>.json)")

@@ -15,10 +15,12 @@ from repro.core.metrics import (
     summarize, tenant_median_rtts, tenant_throughputs,
     throughput_msgs_per_s)
 from repro.core.patterns import (
-    CONSUMER_SWEEP, TENANT_SWEEP, TenantPoint, multi_tenant,
+    CONSUMER_SWEEP, DEPLOYMENT_ARCHS, TENANT_SWEEP, FeasibilityStudy,
+    TenantPoint, crossover_point, deployment_feasibility, multi_tenant,
     overflow_stress, run_pattern, sweep)
 from repro.core.s3m import ResourceSettings, S3MService
-from repro.core.scistream import S2CS, S2UC, establish_prs_session
+from repro.core.scistream import (
+    S2CS, S2UC, establish_prs_session, provision_tenant_tunnels)
 from repro.core.simulator import (
     ENGINES, Engine, ExperimentSpec, RunResult, SimConfig, SimParams,
     StreamSim, get_engine, run_experiment)
@@ -29,13 +31,16 @@ from repro.core.workloads import (
 __all__ = [
     "ALL_ARCHITECTURES", "Architecture", "BrokerCluster", "CONSUMER_SWEEP",
     "Calibration", "CampaignResult", "CampaignSpec", "CellSpec",
-    "ClassicQueue", "ClusterInventory", "DSTREAM", "DirectStreaming",
-    "ENGINES", "Engine", "ExperimentSpec", "GENERIC", "LSTREAM",
+    "ClassicQueue", "ClusterInventory", "DEPLOYMENT_ARCHS", "DSTREAM",
+    "DirectStreaming", "ENGINES", "Engine", "ExperimentSpec",
+    "FeasibilityStudy", "GENERIC", "LSTREAM",
     "ManagedServiceStreaming", "Message", "ProxiedStreaming",
     "RabbitMQRelease", "ResourceSettings", "RunResult", "S2CS", "S2UC",
     "S3MService", "SimConfig", "SimParams", "StreamSim", "TENANT_SWEEP",
     "TenantPoint", "VectorizedStreamSim", "WORKLOADS", "Workload",
-    "cell_key", "establish_prs_session", "get_engine", "get_workload",
+    "cell_key", "crossover_point", "deployment_feasibility",
+    "establish_prs_session", "get_engine", "get_workload",
+    "provision_tenant_tunnels",
     "jain_fairness", "make_architecture", "multi_tenant",
     "overflow_stress", "overhead_table", "overhead_vs_baseline",
     "rtt_cdf", "run_campaign", "run_experiment", "run_many",

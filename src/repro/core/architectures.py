@@ -137,6 +137,23 @@ class Calibration:
     mss_extra_latency_s: float = 1.2e-3     # route controller / FQDN path
     # PRS keeps tunnel streams warm => slightly lower receive latency
     prs_small_msg_latency_s: float = 6.5e-3
+    # --- multi-tenant DTS (per-tenant S2DS tunnels, §6 deployment study) ---
+    # With several independent users, DTS stops being "one NodePort per
+    # client": each tenant gets its own minimal-hop S2DS control/data
+    # path (a dedicated per-tenant tunnel pair), and every tenant's
+    # tunnel terminates on the facility's edge gateway (DTN) — so
+    # contention moves from the broker to the shared facility ingress.
+    dts_tenant_tunnel_gbps: float = 10.0    # dedicated per-tenant pair
+    dts_tenant_tunnel_service_s: float = 15e-6
+    # the DTN's dual-homed NIC pair (2x the DSN NodePort effective rate)
+    dts_gw_gbps: float = 3.74
+    dts_gw_service_s: float = 6e-6          # per-message gateway forward
+    # every per-tenant tunnel is its own process on the gateway host:
+    # TLS-session/context-switch pressure inflates the *per-message*
+    # gateway + endpoint service as the tenant count grows past the
+    # knee — the mechanism that hands the high-tenant regime to MSS
+    dts_tenant_gw_penalty: float = 0.15
+    dts_tenant_gw_after: int = 4
 
 
 DEFAULT_CALIBRATION = Calibration()
@@ -153,10 +170,22 @@ CPROXY_NODE = 1
 
 
 class Architecture:
-    """Base: owns resource specs + path constructors for the simulator."""
+    """Base: owns resource specs + path constructors for the simulator.
+
+    Multi-tenant deployments (paper §6): :meth:`configure` receives the
+    experiment's tenant count; an architecture whose hop graph differs
+    *per tenant* (DTS's dedicated per-tenant tunnels) sets
+    :attr:`tenant_paths` and reads the ``tenant`` argument of the path
+    constructors — both engines pass the publishing/consuming client's
+    tenant.  Architectures whose tenants share one fabric (PRS's single
+    proxy pair, MSS's LB+ingress) leave it False and ignore ``tenant``.
+    """
 
     name: str = "base"
     deployment_feasibility: str = ""
+    #: True when the hop graph depends on the ``tenant`` path argument
+    #: (set by :meth:`configure` on tenant-aware architectures)
+    tenant_paths: bool = False
 
     def __init__(self, inventory: Optional[ClusterInventory] = None,
                  cal: Optional[Calibration] = None):
@@ -193,8 +222,13 @@ class Architecture:
     def _build(self) -> None:  # per-arch extra resources
         pass
 
-    def configure(self, n_producers: int, n_consumers: int) -> None:
-        """Experiment-size-dependent adjustments (idempotent)."""
+    def configure(self, n_producers: int, n_consumers: int,
+                  tenants: int = 1) -> None:
+        """Experiment-size-dependent adjustments (idempotent).
+
+        ``tenants``: how many independent workflows this deployment
+        hosts (1 = the single-user figures).  Tenant-aware
+        architectures build per-tenant resources here."""
         pass
 
     def _add(self, spec: ResourceSpec) -> None:
@@ -237,12 +271,14 @@ class Architecture:
 
     # -- paths (override) ---------------------------------------------------------
     def publish_path(self, producer_node: int, broker_node: int,
-                     home_node: int) -> list[PathElement]:
-        """producer client -> enqueued at the queue's home node."""
+                     home_node: int, tenant: int = 0) -> list[PathElement]:
+        """producer client -> enqueued at the queue's home node.
+        ``tenant`` is the publishing client's tenant index; only
+        :attr:`tenant_paths` architectures read it."""
         raise NotImplementedError
 
     def delivery_path(self, broker_node: int, home_node: int,
-                      consumer_node: int) -> list[PathElement]:
+                      consumer_node: int, tenant: int = 0) -> list[PathElement]:
         """queue home -> consumer client, exiting via ``broker_node`` (the
         node the consumer's AMQP connection terminates on)."""
         raise NotImplementedError
@@ -259,18 +295,22 @@ class Architecture:
         return out
 
     def reply_publish_path(self, consumer_node: int, broker_node: int,
-                           home_node: int) -> list[PathElement]:
+                           home_node: int, tenant: int = 0) -> list[PathElement]:
         """Consumer -> broker for replies: mirrors the producer publish path
-        but from a consumer node (overridden where asymmetric)."""
+        but from a consumer node (overridden where asymmetric).
+        ``tenant`` is the *replying consumer's* tenant."""
         return self._swap_prefix(
-            self.publish_path(consumer_node, broker_node, home_node),
+            self.publish_path(consumer_node, broker_node, home_node,
+                              tenant=tenant),
             "plink:", "clink_tx:")
 
     def reply_delivery_path(self, home_node: int, broker_node: int,
-                            producer_node: int) -> list[PathElement]:
-        """Broker -> producer for replies: mirrors the delivery path."""
+                            producer_node: int, tenant: int = 0) -> list[PathElement]:
+        """Broker -> producer for replies: mirrors the delivery path.
+        ``tenant`` is the *receiving producer's* tenant."""
         return self._swap_prefix(
-            self.delivery_path(broker_node, home_node, producer_node),
+            self.delivery_path(broker_node, home_node, producer_node,
+                               tenant=tenant),
             "clink:", "plink_rx:")
 
     def control_latency_s(self) -> float:
@@ -296,27 +336,86 @@ class Architecture:
 
 
 class DirectStreaming(Architecture):
-    """§2.1/§4.3 — NodePort-exposed brokers, AMQPS end-to-end."""
+    """§2.1/§4.3 — NodePort-exposed brokers, AMQPS end-to-end.
+
+    **Multi-tenant mode** (``configure(tenants=T)`` with ``T > 1`` —
+    the §6 deployment-feasibility study): DTS cannot hand every user a
+    NodePort + firewall rule, so each tenant instead gets a dedicated
+    minimal-hop S2DS control/data path — its own tunnel pair
+    (``ttun:{t}``, provisioned per tenant, see
+    :func:`repro.core.scistream.provision_tenant_tunnels`) terminating
+    on the facility's edge gateway.  The gateway NIC (``dts_gw_in`` /
+    ``dts_gw_out``) is the one link every tenant's tunnel shares, so
+    multi-tenant contention appears at the facility ingress rather
+    than inside the broker; per-tenant tunnel endpoints also share the
+    gateway host's CPU, inflating their per-message service as the
+    tenant (process) count grows (``dts_tenant_gw_penalty``)."""
 
     name = "dts"
     deployment_feasibility = (
         "requires firewall/iptables rules, NodePort + DNS admin; viable only "
         "within unified administrative domains")
 
-    def publish_path(self, producer_node, broker_node, home_node):
+    def configure(self, n_producers: int, n_consumers: int,
+                  tenants: int = 1) -> None:
+        c = self.cal
+        self._tenants = tenants
+        self.tenant_paths = tenants > 1
+        if tenants <= 1:
+            return
+        over = max(0, tenants - c.dts_tenant_gw_after)
+        infl = 1.0 + c.dts_tenant_gw_penalty * over
+        self._add(ResourceSpec(
+            "dts_gw_in", "pipe", rate_Bps=c.dts_gw_gbps * GBIT / 8.0,
+            service_s=c.dts_gw_service_s * infl))
+        self._add(ResourceSpec(
+            "dts_gw_out", "pipe", rate_Bps=c.dts_gw_gbps * GBIT / 8.0,
+            service_s=c.dts_gw_service_s * infl))
+        svc = c.dts_tenant_tunnel_service_s * infl
+        for t in range(tenants):
+            # servers=2: the tenant's producer-side + consumer-side
+            # S2DS endpoints, a dedicated (not load-balanced) pair
+            self._add(ResourceSpec(
+                f"ttun:{t}", "pool", servers=2, service_s=svc,
+                per_byte_s=8.0 / (c.dts_tenant_tunnel_gbps * GBIT)))
+
+    def publish_path(self, producer_node, broker_node, home_node,
+                     tenant: int = 0):
+        c = self.cal
+        if self.tenant_paths:
+            els = [
+                self._tls(PathElement(f"plink:{producer_node}",
+                                      extra_bytes=c.frame_bytes)),
+                PathElement(f"ttun:{tenant}", latency_s=c.proxy_latency_s),
+                self._tls(PathElement("dts_gw_in")),
+                PathElement(f"dsn_int:{broker_node}"),
+            ]
+            els += self._broker_ingest(broker_node, home_node)
+            return els
         els = [
             self._tls(PathElement(f"plink:{producer_node}",
-                                  extra_bytes=self.cal.frame_bytes)),
+                                  extra_bytes=c.frame_bytes)),
             self._tls(PathElement(f"dsn_in:{broker_node}")),
         ]
         els += self._broker_ingest(broker_node, home_node)
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node):
+    def delivery_path(self, broker_node, home_node, consumer_node,
+                      tenant: int = 0):
+        c = self.cal
         els = self._broker_egress(home_node, broker_node)
+        if self.tenant_paths:
+            els += [
+                PathElement(f"dsn_int:{broker_node}"),
+                self._tls(PathElement("dts_gw_out",
+                                      extra_bytes=c.frame_bytes)),
+                PathElement(f"ttun:{tenant}", latency_s=c.proxy_latency_s),
+                self._tls(PathElement(f"clink:{consumer_node}")),
+            ]
+            return els
         els += [
             self._tls(PathElement(f"dsn_out:{broker_node}",
-                                  extra_bytes=self.cal.frame_bytes)),
+                                  extra_bytes=c.frame_bytes)),
             self._tls(PathElement(f"clink:{consumer_node}")),
         ]
         return els
@@ -328,7 +427,17 @@ class DirectStreaming(Architecture):
 
 
 class ProxiedStreaming(Architecture):
-    """§2.2/§4.4 — S2DS proxies + overlay tunnel (Stunnel or HAProxy)."""
+    """§2.2/§4.4 — S2DS proxies + overlay tunnel (Stunnel or HAProxy).
+
+    **Multi-tenant mode**: PRS sits between DTS and MSS in the §6
+    deployment study — every tenant multiplexes the *one* shared proxy
+    pair + overlay tunnel (no per-tenant hop-graph difference, so
+    ``tenant_paths`` stays False) ahead of per-tenant vhost queues.
+    Contention appears at the shared tunnel: the single-process proxy's
+    per-message cost grows with the number of multiplexed flows
+    (``haproxy_flow_penalty``), and Stunnel's hard connection cap makes
+    large tenant counts outright infeasible (the paper's missing data
+    points)."""
 
     name = "prs"
     deployment_feasibility = (
@@ -365,10 +474,15 @@ class ProxiedStreaming(Architecture):
         self._add(ResourceSpec("cproxy", "pool", servers=4,
                                service_s=c.proxy_msg_cpu_s))
 
-    def configure(self, n_producers: int, n_consumers: int) -> None:
+    def configure(self, n_producers: int, n_consumers: int,
+                  tenants: int = 1) -> None:
+        self._tenants = tenants
         if self.tunnel != "haproxy":
             return
         c = self.cal
+        # the single-process proxy's event loop serializes every
+        # multiplexed flow; with tenants > 1 each tenant's producers are
+        # distinct flows, so the penalty already scales with the total
         over = max(0, n_producers - c.haproxy_penalty_after)
         svc = c.tunnel_msg_service_s * (1.0 + c.haproxy_flow_penalty * over)
         self._add(dataclasses.replace(self._specs["tunnel"], service_s=svc))
@@ -387,7 +501,8 @@ class ProxiedStreaming(Architecture):
     def _tunnel_leg(self) -> list[PathElement]:
         return [self._tls(PathElement("tunnel"))]
 
-    def publish_path(self, producer_node, broker_node, home_node):
+    def publish_path(self, producer_node, broker_node, home_node,
+                     tenant: int = 0):
         c = self.cal
         els = [
             # producer -> producer-side S2DS: plain AMQP inside facility
@@ -404,7 +519,8 @@ class ProxiedStreaming(Architecture):
         ]
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node):
+    def delivery_path(self, broker_node, home_node, consumer_node,
+                      tenant: int = 0):
         # consumers are inside the facility: direct AMQP, no tunnel
         els = self._broker_egress(home_node, broker_node)
         els += [
@@ -413,7 +529,8 @@ class ProxiedStreaming(Architecture):
         ]
         return els
 
-    def reply_publish_path(self, consumer_node, broker_node, home_node):
+    def reply_publish_path(self, consumer_node, broker_node, home_node,
+                           tenant: int = 0):
         # consumer -> broker directly (plain AMQP inside the facility)
         els = [
             PathElement(f"clink_tx:{consumer_node}",
@@ -423,7 +540,8 @@ class ProxiedStreaming(Architecture):
         els += self._broker_ingest(broker_node, home_node)
         return els
 
-    def reply_delivery_path(self, home_node, broker_node, producer_node):
+    def reply_delivery_path(self, home_node, broker_node, producer_node,
+                            tenant: int = 0):
         """Replies back to external producers re-traverse the tunnel."""
         c = self.cal
         els = [
@@ -478,7 +596,8 @@ class ManagedServiceStreaming(Architecture):
     def _worker(self, node: int) -> int:
         return node % self.cal.ingress_workers
 
-    def publish_path(self, producer_node, broker_node, home_node):
+    def publish_path(self, producer_node, broker_node, home_node,
+                     tenant: int = 0):
         c = self.cal
         els = [
             self._tls(PathElement(f"plink:{producer_node}",
@@ -493,7 +612,8 @@ class ManagedServiceStreaming(Architecture):
         ]
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node):
+    def delivery_path(self, broker_node, home_node, consumer_node,
+                      tenant: int = 0):
         c = self.cal
         els = [
             PathElement(f"bcpu:{home_node}", latency_s=c.broker_deliver_cpu_s),

@@ -138,7 +138,36 @@ class CampaignSpec:
     #: axis names a cell_params match may constrain
     AXES = ("pattern", "arch", "workload", "n_consumers", "tenants")
 
+    def _validate_tenant_grid(self) -> None:
+        """A tenant sweep crosses *every* (pattern, arch, consumers)
+        combination — reject the cross products that cannot mean
+        anything before any cell runs, with the offending combo named
+        (an :class:`ExperimentSpec` error deep inside a 100-cell grid
+        is much harder to act on)."""
+        if max(self.tenants, default=1) <= 1:
+            return
+        bad_pat = [p for p in self.patterns
+                   if p not in ("work_sharing", "feedback")]
+        if bad_pat:
+            raise ValueError(
+                f"campaign {self.name!r} sweeps tenants="
+                f"{tuple(self.tenants)} but includes pattern(s) "
+                f"{bad_pat}: multi-tenant cells support only "
+                f"work_sharing/feedback.  Split the broadcast patterns "
+                f"into their own campaign, or drop tenants > 1.")
+        bad = [(nc, t) for nc in self.consumers
+               for t in self.tenants if t > 1 and nc % t]
+        if bad:
+            raise ValueError(
+                f"campaign {self.name!r} crosses consumers x tenants "
+                f"into ambiguous cells {bad}: each tenant count must "
+                f"evenly divide each consumer count (producers/"
+                f"consumers partition into contiguous tenant blocks).  "
+                f"Align the axes (e.g. powers of two), or use separate "
+                f"campaigns per tenant count.")
+
     def cells(self) -> list[CellSpec]:
+        self._validate_tenant_grid()
         for match, _ in self.cell_params:
             unknown = set(match) - set(self.AXES)
             if unknown:

@@ -34,6 +34,8 @@ class Summary:
     #: how many (feasible) runs a multi-seed mean covers; 1 for a single
     #: run, set by patterns.average_summaries
     n_runs: int = 1
+    #: the cell's tenancy (paper §6 deployment study); 1 = single-user
+    tenants: int = 1
 
 
 def throughput_msgs_per_s(result: RunResult, warmup_frac: float = 0.05) -> float:
@@ -58,7 +60,8 @@ def summarize(result: RunResult) -> Summary:
                 feasible=result.feasible,
                 rejected=result.rejected_publishes,
                 blocked=result.blocked_confirms,
-                n_messages=result.n_consumed)
+                n_messages=result.n_consumed,
+                tenants=spec.tenants)
     if not result.feasible:
         return s
     thr = throughput_msgs_per_s(result)

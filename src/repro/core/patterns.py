@@ -103,7 +103,7 @@ TENANT_SWEEP = (1, 2, 4, 8, 16, 32, 64)
 @dataclasses.dataclass
 class TenantPoint:
     """One point of the multi-tenant contention curve: ``tenants``
-    independent workflows sharing one managed-broker deployment."""
+    independent workflows sharing one deployment of ``arch``."""
 
     tenants: int
     isolation: str                   # "shared" | "vhost"
@@ -118,12 +118,46 @@ class TenantPoint:
     fairness: float = float("nan")
     #: worst-off tenant's share of the best-off tenant's rate
     min_max_ratio: float = float("nan")
-    #: per-tenant throughput relative to the sweep's first point
-    #: (1.0 = no degradation as tenants are added)
+    #: per-tenant throughput relative to the explicit baseline cell
+    #: (``multi_tenant(baseline_tenants=...)``, default the 1-tenant
+    #: deployment; 1.0 = no degradation as tenants are added)
     degradation: float = float("nan")
+    #: the busiest shared facility-ingress resource (DTS gateway NIC,
+    #: PRS tunnel, MSS ingress, DSN NodePort NICs) as a fraction of the
+    #: cell's bottleneck, from the static cost model: ~1.0 means the
+    #: shared ingress is what every tenant is queueing on
+    ingress_utilization: float = float("nan")
     rejected: float = 0.0
     blocked: float = 0.0
     n_runs: int = 0
+
+
+#: resource-key prefixes that count as "shared facility ingress" for
+#: :attr:`TenantPoint.ingress_utilization`.  Deliberately excluded:
+#: per-tenant ``ttun:*`` pairs (dedicated, not shared) and the
+#: broker-internal ``dsn_int:*`` SDN links (hence the colon-terminated
+#: NodePort prefixes, which would otherwise prefix-match them).
+INGRESS_RESOURCE_PREFIXES = (
+    "dts_gw", "ingress_in", "ingress_out", "tunnel", "dsn_in:", "dsn_out:")
+
+
+def _ingress_utilization(spec: ExperimentSpec,
+                         inventory: Optional[ClusterInventory]) -> float:
+    """Shared facility-ingress utilization of one cell, off the
+    vectorized engine's static bottleneck analysis (a construction-time
+    probe — no run needed, engine-choice independent)."""
+    import numpy as np
+    from repro.core.simulator import InfeasibleConfiguration
+    from repro.core.vectorized import VectorizedStreamSim
+    try:
+        sim = VectorizedStreamSim(spec, inventory)
+    except InfeasibleConfiguration:
+        return float("nan")
+    vals = [v for k, v in sim.resource_cost.items()
+            if k.startswith(INGRESS_RESOURCE_PREFIXES)]
+    if not vals or sim.bottleneck_cost <= 0:
+        return float("nan")
+    return float(np.max(vals) / sim.bottleneck_cost)
 
 
 def multi_tenant(arch: str = "mss",
@@ -136,73 +170,214 @@ def multi_tenant(arch: str = "mss",
                  n_runs: int = 3, seed: int = 0,
                  engine: Optional[str] = None,
                  inventory: Optional[ClusterInventory] = None,
+                 baseline_tenants: int = 1,
                  **param_overrides) -> list[TenantPoint]:
     """Multi-tenant contention sweep: N independent feedback workflows
-    (1 producer + 1 consumer each by default) share one broker
-    deployment, as tenant count grows ``1 -> 64``.
+    (1 producer + 1 consumer each by default) share one deployment of
+    ``arch``, as tenant count grows ``1 -> 64``.
 
-    This is the quantitative version of the paper's §6 claim that MSS
-    "provides greater deployment feasibility and scalability across
-    multiple users": every tenant still funnels through the same
-    LB + ingress + broker fabric, so per-tenant throughput degrades and
-    RTT inflates as tenants are added — the sweep measures how much,
-    and how *fairly* the shared fabric splits capacity (Jain index +
-    worst/best tenant ratio).  ``isolation`` picks the broker layout:
-    ``"vhost"`` gives each tenant its own queues in its own vhost
-    (RabbitMQ namespacing — the S3M provisioning model's per-project
-    isolation), ``"shared"`` drops every tenant into the same work
-    queues (messages mix across tenants).
+    This quantifies the paper's §6 deployment-feasibility argument.
+    What "sharing one deployment" means is architecture-specific:
+
+    * ``mss`` — every tenant funnels through the same LB + ingress +
+      broker fabric (the paper's "greater deployment feasibility and
+      scalability across multiple users" claim);
+    * ``dts`` — each tenant gets its own dedicated minimal-hop S2DS
+      tunnel pair; contention appears at the shared facility gateway
+      NIC the tunnels terminate on (see
+      :class:`repro.core.architectures.DirectStreaming`);
+    * ``prs-*`` — tenants multiplex the one shared proxy pair ahead of
+      per-tenant queues (Stunnel's 16-connection cap makes large tenant
+      counts infeasible, as in the paper's missing data points).
+
+    ``isolation`` picks the broker layout: ``"vhost"`` gives each
+    tenant its own queues in its own vhost (RabbitMQ namespacing — the
+    S3M provisioning model's per-project isolation), ``"shared"`` drops
+    every tenant into the same work queues (messages mix across
+    tenants).
 
     Offered load scales with the tenant count (``messages_per_tenant``
-    each), so a flat curve means perfect scaling.  Returns one
+    each), so a flat curve means perfect scaling.  All cells (every
+    tenant count x ``n_runs`` seeds) go through one
+    :func:`~repro.core.vectorized.run_many` call, so each cell's seeds
+    stack as lanes of one batched engine run.  Returns one
     :class:`TenantPoint` per entry of ``tenant_counts``, with
-    ``degradation`` relative to the first point."""
+    ``degradation`` relative to the explicit ``baseline_tenants`` cell
+    — which is run even when the sweep itself starts at a higher
+    tenant count, so a ``(4, 16, 64)`` sweep still reports degradation
+    against the single-tenant deployment."""
+    import numpy as np
+    from repro.core.vectorized import run_many
     wl = get_workload(workload) if isinstance(workload, str) else workload
     if engine is not None:
         param_overrides.setdefault("engine", engine)
-    points: list[TenantPoint] = []
-    base: Optional[float] = None
-    for T in tenant_counts:
-        nP, nC = T * producers_per_tenant, T * consumers_per_tenant
-        specs = [ExperimentSpec(
-                    pattern="feedback", workload=wl, arch=arch,
-                    n_producers=nP, n_consumers=nC,
-                    total_messages=T * messages_per_tenant,
-                    params=_params(seed + 1000 * r, **param_overrides),
-                    tenants=T, tenant_isolation=isolation)
-                 for r in range(n_runs)]
-        if specs[0].params.engine == "vectorized":
-            from repro.core.vectorized import run_many
-            results = run_many(specs, inventory)
-        else:
-            results = [run_experiment(s, inventory) for s in specs]
-        feas = [r for r in results if r.feasible]
+
+    def spec_of(T: int, r: int) -> ExperimentSpec:
+        return ExperimentSpec(
+            pattern="feedback", workload=wl, arch=arch,
+            n_producers=T * producers_per_tenant,
+            n_consumers=T * consumers_per_tenant,
+            total_messages=T * messages_per_tenant,
+            params=_params(seed + 1000 * r, **param_overrides),
+            tenants=T, tenant_isolation=isolation)
+
+    counts = list(tenant_counts)
+    run_counts = list(counts)
+    if baseline_tenants not in run_counts:
+        run_counts.append(baseline_tenants)
+    specs = [spec_of(T, r) for T in run_counts for r in range(n_runs)]
+    results = run_many(specs, inventory)
+    by_count = {T: results[i * n_runs:(i + 1) * n_runs]
+                for i, T in enumerate(run_counts)}
+
+    def stats_of(T: int) -> Optional[dict]:
+        feas = [r for r in by_count[T] if r.feasible]
         if not feas:
-            points.append(TenantPoint(T, isolation, arch, wl.name, False))
-            continue
-        import numpy as np
+            return None
         thr = np.stack([tenant_throughputs(r) for r in feas])
         rtt = np.stack([tenant_median_rtts(r) for r in feas])
-        per_thr = float(np.nanmean(thr))
         ratios = [float(row.min() / row.max())
                   for row in thr if np.isfinite(row).all() and row.max() > 0]
-        pt = TenantPoint(
-            tenants=T, isolation=isolation, arch=arch, workload=wl.name,
-            feasible=True,
-            tenant_throughput_msgs_s=per_thr,
-            tenant_median_rtt_s=float(np.nanmean(rtt)),
-            fairness=float(np.nanmean([jain_fairness(row)
-                                       for row in thr])),
-            min_max_ratio=(float(np.mean(ratios)) if ratios
-                           else float("nan")),
+        return dict(
+            per_thr=float(np.nanmean(thr)),
+            rtt=float(np.nanmean(rtt)),
+            fairness=float(np.nanmean([jain_fairness(row) for row in thr])),
+            min_max=(float(np.mean(ratios)) if ratios else float("nan")),
             rejected=float(np.mean([r.rejected_publishes for r in feas])),
             blocked=float(np.mean([r.blocked_confirms for r in feas])),
             n_runs=len(feas))
-        if base is None:
-            base = per_thr
-        pt.degradation = (per_thr / base if base else float("nan"))
-        points.append(pt)
+
+    all_stats = {T: stats_of(T) for T in run_counts}
+    base_st = all_stats.get(baseline_tenants)
+    base = base_st["per_thr"] if base_st else None
+    points: list[TenantPoint] = []
+    for T in counts:
+        st = all_stats[T]
+        if st is None:
+            points.append(TenantPoint(T, isolation, arch, wl.name, False))
+            continue
+        points.append(TenantPoint(
+            tenants=T, isolation=isolation, arch=arch, workload=wl.name,
+            feasible=True,
+            tenant_throughput_msgs_s=st["per_thr"],
+            tenant_median_rtt_s=st["rtt"],
+            fairness=st["fairness"],
+            min_max_ratio=st["min_max"],
+            degradation=(st["per_thr"] / base if base else float("nan")),
+            ingress_utilization=_ingress_utilization(spec_of(T, 0),
+                                                     inventory),
+            rejected=st["rejected"],
+            blocked=st["blocked"],
+            n_runs=st["n_runs"]))
     return points
+
+
+# ---------------------------------------------------------------------------
+# Cross-architecture deployment feasibility (paper §6, quantified)
+# ---------------------------------------------------------------------------
+
+#: the three deployment models of the §6 comparison (prs-haproxy rather
+#: than prs-stunnel: the Stunnel tunnel's 16-connection cap makes most
+#: of the tenant sweep infeasible, exactly the paper's missing points)
+DEPLOYMENT_ARCHS = ("dts", "prs-haproxy", "mss")
+
+
+@dataclasses.dataclass
+class FeasibilityStudy:
+    """Result of :func:`deployment_feasibility`: one multi-tenant curve
+    per architecture plus the DTS-vs-MSS crossover headline."""
+
+    archs: tuple
+    tenant_counts: tuple
+    #: arch name -> one TenantPoint per tenant count
+    curves: dict[str, list[TenantPoint]]
+    #: interpolated tenant count where MSS's shared-broker per-tenant
+    #: throughput first meets per-tenant-tunnel DTS (NaN = no crossover
+    #: inside the sweep)
+    crossover_tenants: float = float("nan")
+    #: DTS's shared facility-ingress utilization at the crossover
+    crossover_utilization: float = float("nan")
+
+    def headline(self) -> str:
+        if self.crossover_tenants != self.crossover_tenants:   # NaN
+            return ("no DTS-vs-MSS crossover inside the sweep "
+                    f"(tenants {min(self.tenant_counts)}"
+                    f"-{max(self.tenant_counts)})")
+        return (f"MSS's shared broker overtakes per-tenant DTS tunnels "
+                f"at ~{self.crossover_tenants:.1f} tenants "
+                f"(DTS ingress utilization "
+                f"{self.crossover_utilization:.2f})")
+
+
+def crossover_point(a_pts: Sequence[TenantPoint],
+                    b_pts: Sequence[TenantPoint]
+                    ) -> tuple[float, float]:
+    """First tenant count where curve ``b``'s per-tenant throughput
+    meets/overtakes curve ``a``'s, interpolated in ``log2(tenants)``
+    between the bracketing sweep points.  Returns ``(tenants,
+    a_ingress_utilization_at_crossover)``; ``(nan, nan)`` when the
+    curves never cross inside the sweep (or share no feasible tenant
+    counts)."""
+    import numpy as np
+    a_by = {p.tenants: p for p in a_pts if p.feasible}
+    b_by = {p.tenants: p for p in b_pts if p.feasible}
+    common = sorted(set(a_by) & set(b_by))
+    if not common:
+        return float("nan"), float("nan")
+    diffs = [b_by[T].tenant_throughput_msgs_s
+             - a_by[T].tenant_throughput_msgs_s for T in common]
+    if diffs[0] >= 0:
+        return float(common[0]), float(a_by[common[0]].ingress_utilization)
+    for (T0, d0), (T1, d1) in zip(zip(common, diffs),
+                                  zip(common[1:], diffs[1:])):
+        if d0 < 0 <= d1:
+            f = -d0 / (d1 - d0) if d1 != d0 else 0.0
+            lT = np.log2(T0) + f * (np.log2(T1) - np.log2(T0))
+            u0 = a_by[T0].ingress_utilization
+            u1 = a_by[T1].ingress_utilization
+            return float(2.0 ** lT), float(u0 + f * (u1 - u0))
+    return float("nan"), float("nan")
+
+
+def deployment_feasibility(archs: Sequence[str] = DEPLOYMENT_ARCHS,
+                           tenant_counts: Sequence[int] = TENANT_SWEEP, *,
+                           isolation: str = "vhost",
+                           workload: str | Workload = "dstream",
+                           messages_per_tenant: int = 256,
+                           n_runs: int = 3, seed: int = 0,
+                           engine: Optional[str] = None,
+                           inventory: Optional[ClusterInventory] = None,
+                           baseline_tenants: int = 1,
+                           **param_overrides) -> FeasibilityStudy:
+    """The paper's §6 deployment-feasibility argument, quantified: the
+    same 1 -> N tenant sweep across all three architecture deployment
+    models (per-tenant DTS tunnels vs PRS shared-proxy ingress vs the
+    MSS managed broker), one :class:`TenantPoint` curve per
+    architecture (each arch's cells batched through ``run_many``
+    stacked execution — see :func:`multi_tenant`).
+
+    The headline is the **crossover point**: DTS's dedicated per-tenant
+    tunnels win at low tenant counts (minimal hops, no shared-fabric
+    tax), but every tunnel terminates on the facility's gateway NIC —
+    as that shared ingress saturates and the gateway's per-tenant
+    endpoint overhead grows, MSS's wider managed ingress overtakes it.
+    ``crossover_tenants`` / ``crossover_utilization`` report where, and
+    at what DTS ingress utilization, that happens."""
+    curves = {arch: multi_tenant(
+                  arch, tenant_counts, isolation=isolation,
+                  workload=workload,
+                  messages_per_tenant=messages_per_tenant,
+                  n_runs=n_runs, seed=seed, engine=engine,
+                  inventory=inventory, baseline_tenants=baseline_tenants,
+                  **param_overrides)
+              for arch in archs}
+    ct, cu = float("nan"), float("nan")
+    if "dts" in curves and "mss" in curves:
+        ct, cu = crossover_point(curves["dts"], curves["mss"])
+    return FeasibilityStudy(archs=tuple(archs),
+                            tenant_counts=tuple(tenant_counts),
+                            curves=curves, crossover_tenants=ct,
+                            crossover_utilization=cu)
 
 
 def run_pattern(pattern: str, arch: str, workload: str | Workload,

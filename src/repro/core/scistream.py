@@ -201,6 +201,45 @@ class S2UC:
         consumer_s2cs.release(uid)
 
 
+def provision_tenant_tunnels(tenants: int, *, num_conn: int = 1,
+                             bandwidth_gbps: float = 1.0,
+                             tunnel: str = "stunnel"
+                             ) -> list[StreamingSession]:
+    """Provision the per-tenant dedicated tunnel pairs of the
+    multi-tenant DTS deployment model (paper §6's feasibility argument,
+    control-plane side): each tenant runs the full §3.2 handshake
+    against the *same* facility gateway pair, getting its own S2DS
+    data path (the ``ttun:{t}`` resources the tenant-aware
+    :class:`~repro.core.architectures.DirectStreaming` hop graph
+    charges).
+
+    This is where per-user DTS provisioning stops scaling in a very
+    concrete way: every tenant's session allocates a streaming port on
+    each gateway's S2CS, and the §3.2 port range (:data:`STREAM_PORT_RANGE`,
+    11 ports) is exhausted after 11 tenants — the control plane refuses
+    (:class:`SciStreamError`) long before the 64-tenant sweeps the
+    shared-ingress architectures handle.  The data-plane simulator
+    deliberately does *not* enforce this cap (so the §6 curves span the
+    full sweep); the quantitative study reports it alongside the
+    throughput crossover."""
+    if tenants < 1:
+        raise SciStreamError(f"tenants must be >= 1, got {tenants}")
+    s2uc = S2UC()
+    cons_s2cs = S2CS("198.51.100.0")
+    prod_s2cs = S2CS("198.51.100.1")
+    sessions = []
+    for t in range(tenants):
+        proxy_port, uid = s2uc.inbound_request(
+            server_cert=cons_s2cs.cert, remote_ip=f"10.1.1.{100 + t}",
+            s2cs=cons_s2cs, receiver_ports=(5672,), num_conn=num_conn)
+        sessions.append(s2uc.outbound_request(
+            server_cert=prod_s2cs.cert, remote_ip="198.51.100.0",
+            s2cs=prod_s2cs, receiver_port=proxy_port, uid=uid,
+            num_conn=num_conn, bandwidth_gbps=bandwidth_gbps,
+            tunnel=tunnel))
+    return sessions
+
+
 def establish_prs_session(num_conn: int = 1, tunnel: str = "haproxy",
                           bandwidth_gbps: float = 1.0) -> StreamingSession:
     """Convenience: run the full §4.4 handshake on the paper's topology

@@ -294,7 +294,13 @@ class StreamSim:
         self.p = spec.params
         self.inv = inventory or ClusterInventory()
         self.arch = arch or make_architecture(spec.arch, self.inv)
-        self.arch.configure(spec.n_producers, spec.n_consumers)
+        self.arch.configure(spec.n_producers, spec.n_consumers,
+                            tenants=spec.tenants)
+        # tenant of producer/consumer k is k // per-tenant-count
+        # (contiguous blocks); tenant-aware architectures route each
+        # client through its own tenant's resources (e.g. DTS tunnels)
+        self._ppt = max(1, spec.n_producers // spec.tenants)
+        self._cpt = max(1, spec.n_consumers // spec.tenants)
         self.rng = np.random.default_rng(self.p.seed)
         self.now = 0.0
         self._heap: list[tuple[float, int, Callable[[], None]]] = []
@@ -447,6 +453,7 @@ class StreamSim:
         spec, p = self.spec, self.p
         pnode = self.inv.producer_node_of(pr)
         bnode = pr % self.inv.n_dsn
+        tnt = pr // self._ppt
         state = {"sent": 0, "inflight": 0}
         size = spec.workload.payload_bytes
         flush = self.arch.client_flush_s()
@@ -470,7 +477,8 @@ class StreamSim:
                 msg.publish_time = t_start
                 self.publish_starts.append(t_start)
                 home = self._home_of(rk)
-                path = self.arch.publish_path(pnode, bnode, home)
+                path = self.arch.publish_path(pnode, bnode, home,
+                                              tenant=tnt)
                 self._transit(t_start, path, size,
                               lambda t, m=msg: arrive(t, m))
 
@@ -497,7 +505,7 @@ class StreamSim:
 
         def retry(msg: Message) -> None:
             home = self._home_of(msg.routing_key)
-            path = self.arch.publish_path(pnode, bnode, home)
+            path = self.arch.publish_path(pnode, bnode, home, tenant=tnt)
             self._transit(self.now, path, size,
                           lambda t, m=msg: arrive(t, m))
 
@@ -549,7 +557,8 @@ class StreamSim:
         cnode = self.inv.consumer_node_of(cidx)
         home = self.broker.queues[d.queue].home_node
         bnode = (cidx + 1) % self.inv.n_dsn   # node this consumer connects to
-        path = self.arch.delivery_path(bnode, home, cnode)
+        path = self.arch.delivery_path(bnode, home, cnode,
+                                       tenant=cidx // self._cpt)
         size = d.message.size
 
         def landed(t_arr: float) -> None:
@@ -601,7 +610,8 @@ class StreamSim:
                         headers={"req_publish": d.message.publish_time})
         bnode = (cidx + 1) % self.inv.n_dsn
         home = self._home_of(reply.routing_key)
-        path = self.arch.reply_publish_path(cnode, bnode, home)
+        path = self.arch.reply_publish_path(cnode, bnode, home,
+                                            tenant=cidx // self._cpt)
 
         def arrive(t_arr: float) -> None:
             ok, queued = self.broker.publish(reply)
@@ -622,7 +632,8 @@ class StreamSim:
         pnode = self.inv.producer_node_of(pidx)
         home = self.broker.queues[d.queue].home_node
         bnode = pidx % self.inv.n_dsn
-        path = self.arch.reply_delivery_path(home, bnode, pnode)
+        path = self.arch.reply_delivery_path(home, bnode, pnode,
+                                             tenant=pidx // self._ppt)
         size = d.message.size
 
         def landed(t_arr: float) -> None:

@@ -254,7 +254,15 @@ class VectorizedStreamSim:
         self.p = spec.params
         self.inv = inventory or ClusterInventory()
         self.arch = arch or make_architecture(spec.arch, self.inv)
-        self.arch.configure(spec.n_producers, spec.n_consumers)
+        self.arch.configure(spec.n_producers, spec.n_consumers,
+                            tenants=spec.tenants)
+        # tenant-aware hop graphs (DTS per-tenant tunnels): path combos
+        # carry the client's tenant as a trailing column, so _resolve_paths
+        # builds each tenant's own variant; non-tenant archs keep the
+        # 3-column combos (bit-identical to the single-tenant engine)
+        self._tenant_cols = bool(self.arch.tenant_paths)
+        self._ppt = max(1, spec.n_producers // spec.tenants)
+        self._cpt = max(1, spec.n_consumers // spec.tenants)
         check_feasibility(self.arch, spec)
         self.stack_seeds = (list(stack_seeds) if stack_seeds is not None
                             else [self.p.seed])
@@ -396,6 +404,12 @@ class VectorizedStreamSim:
         rsize = max(1, int(size * p.reply_factor))
         legs: list[tuple[str, tuple, float, int]] = []
         pat = spec.pattern
+        # tenant-aware hop graphs: the path-constructor combos carry the
+        # client's tenant as a trailing argument (same convention as the
+        # run methods' combo columns)
+        tcols = self._tenant_cols
+        p_t = (lambda pr: ((pr // self._ppt,) if tcols else ()))
+        c_t = (lambda c: ((c // self._cpt,) if tcols else ()))
         if pat in ("work_sharing", "feedback"):
             nq, q_consumers, prod_queues, _ = self._work_topology()
             q_home = [q % inv.n_dsn for q in range(nq)]
@@ -404,14 +418,15 @@ class VectorizedStreamSim:
                 for qi in prod_queues[pr]:
                     legs.append(("publish_path",
                                  (pr % inv.n_producer_nodes, pr % inv.n_dsn,
-                                  q_home[qi]),
+                                  q_home[qi]) + p_t(pr),
                                  1.0 / (nP * len(prod_queues[pr])), size))
             for qi in range(nq):
                 members = q_consumers[qi]
                 for c in members:
                     legs.append(("delivery_path",
                                  ((int(c) + 1) % inv.n_dsn, q_home[qi],
-                                  int(c) % inv.n_consumer_nodes),
+                                  int(c) % inv.n_consumer_nodes)
+                                 + c_t(int(c)),
                                  1.0 / (nq * len(members)), size))
             if pat == "feedback":
                 # collapse the (consumer x producer) cross product over
@@ -429,13 +444,14 @@ class VectorizedStreamSim:
                         for h, w in home_w.items():
                             legs.append(("reply_publish_path",
                                          (c % inv.n_consumer_nodes,
-                                          (c + 1) % inv.n_dsn, h),
+                                          (c + 1) % inv.n_dsn, h)
+                                         + c_t(c),
                                          w / nC, rsize))
                 for pr in range(nP):
                     legs.append(("reply_delivery_path",
                                  (reply_home[pr], pr % inv.n_dsn,
-                                  pr % inv.n_producer_nodes), 1.0 / nP,
-                                 rsize))
+                                  pr % inv.n_producer_nodes) + p_t(pr),
+                                 1.0 / nP, rsize))
         else:
             gather_home = nC % inv.n_dsn
             legs.append(("publish_path", (0, 0, 0), 1.0 / nC, size))
@@ -471,10 +487,16 @@ class VectorizedStreamSim:
                                              + w * sec)
         c_max = max(max(cost.values(), default=0.0),
                     self._proc_s / max(1, nC))
+        #: per-resource busy seconds per system message + the bottleneck,
+        #: kept for external probes (patterns.deployment_feasibility reads
+        #: the shared facility-ingress utilization off a built engine)
+        self.resource_cost = dict(cost)
+        self.bottleneck_cost = c_max
         if c_max <= 0.0:
             return 0.0, 0.0
         shared = [v for k, v in cost.items()
-                  if k.startswith(("dsn_in", "dsn_out", "dsn_int", "tunnel"))]
+                  if k.startswith(("dsn_in", "dsn_out", "dsn_int", "tunnel",
+                                   "dts_gw", "ttun"))]
         pub_max = max(pub_cost.values(), default=0.0)
         return (max(shared, default=0.0) / c_max,
                 max(0.0, 1.0 - pub_max / c_max))
@@ -1447,10 +1469,22 @@ class VectorizedStreamSim:
                 state["next_launch"] += 1
                 launch_pub(r)
 
+        # tenant-aware hop graphs: combos carry the client's tenant as a
+        # trailing column (the path constructors' 4th argument)
+        tcols = self._tenant_cols
+        ppt, cpt = self._ppt, self._cpt
+
+        def _tenant_col(base: np.ndarray, tenant: np.ndarray) -> np.ndarray:
+            if not tcols:
+                return base
+            return np.concatenate([base, tenant[:, None]], axis=1)
+
         combos_del_by_q = {qi: (lambda mem, cons, qi=qi:
-                                np.stack([c_bnode[cons],
-                                          np.full(cons.size, q_home[qi]),
-                                          c_node[cons]], axis=1))
+                                _tenant_col(
+                                    np.stack([c_bnode[cons],
+                                              np.full(cons.size, q_home[qi]),
+                                              c_node[cons]], axis=1),
+                                    cons // cpt))
                            for qi in range(nq)}
 
         def on_seen_del(mem, t_done, cons):
@@ -1471,9 +1505,11 @@ class VectorizedStreamSim:
             flat_q = msg_q[:, i_blk].ravel()
 
             def combos_of(mem: np.ndarray) -> np.ndarray:
-                return np.stack([pr_node[flat_pr[mem]],
-                                 pr_bnode[flat_pr[mem]],
-                                 q_home[flat_q[mem]]], axis=1)
+                return _tenant_col(
+                    np.stack([pr_node[flat_pr[mem]],
+                              pr_bnode[flat_pr[mem]],
+                              q_home[flat_q[mem]]], axis=1),
+                    flat_pr[mem] // ppt)
 
             def groups_of(mem: np.ndarray):
                 qs = flat_q[mem]
@@ -1507,10 +1543,12 @@ class VectorizedStreamSim:
             mem_arr, cns_arr = members, cons
 
             def combos_of(pos: np.ndarray) -> np.ndarray:
-                return np.stack([c_node[cns_arr[pos]],
-                                 c_bnode[cns_arr[pos]],
-                                 reply_home[mem_arr[pos] // per_producer]],
-                                axis=1)
+                return _tenant_col(
+                    np.stack([c_node[cns_arr[pos]],
+                              c_bnode[cns_arr[pos]],
+                              reply_home[mem_arr[pos] // per_producer]],
+                             axis=1),
+                    cns_arr[pos] // cpt)
 
             def groups_of(pos: np.ndarray):
                 prs = mem_arr[pos] // per_producer
@@ -1521,9 +1559,10 @@ class VectorizedStreamSim:
             def deliver(pr: int, pos_sel: np.ndarray,
                         t_renq: np.ndarray) -> None:
                 def combos_fn(sub_mem, _cons, pr=pr):
-                    return np.broadcast_to(
-                        [reply_home[pr], pr_bnode[pr], pr_node[pr]],
-                        (sub_mem.size, 3))
+                    row = [reply_home[pr], pr_bnode[pr], pr_node[pr]]
+                    if tcols:
+                        row.append(pr // ppt)
+                    return np.broadcast_to(row, (sub_mem.size, len(row)))
 
                 def on_seen(sub_mem, t_seen, _cons):
                     flat_pub = pub_start.reshape(

@@ -187,6 +187,51 @@ def test_campaign_cells_and_per_cell_overrides():
         [cell_key(c) for c in cells]
 
 
+def test_campaign_mixed_arch_tenant_grid():
+    """A tenant sweep crossed over several architectures builds one
+    cell per (arch x tenants x seed) — the §6 deployment grid — and
+    runs them through the batched runner."""
+    spec = CampaignSpec(
+        name="deploy-mini", patterns=("feedback",),
+        architectures=("dts", "mss"), consumers=(4,),
+        tenants=(1, 2, 4), tenant_isolation="vhost",
+        n_runs=2, total_messages=256)
+    cells = spec.cells()
+    assert len(cells) == 2 * 3 * 2
+    assert {(c.arch, c.tenants) for c in cells} == \
+        {(a, t) for a in ("dts", "mss") for t in (1, 2, 4)}
+    assert all(c.tenant_isolation == "vhost" for c in cells)
+    # seeds of one (arch, tenants) cell group and stack together
+    groups = {c.group_key() for c in cells}
+    assert len(groups) == 6
+    res = run_campaign(spec, workers=0)
+    assert len(res.summaries) == len(cells)
+    assert all(s.feasible for s in res.summaries)
+    assert len(res.averaged) == 6
+    assert all(s.n_runs == 2 for s in res.averaged)
+
+
+def test_campaign_tenant_grid_validation_rejects_ambiguous_combos():
+    """Mixing tenants > 1 with broadcast patterns or non-dividing
+    consumer counts is rejected upfront with the combo named (not a
+    late ExperimentSpec error deep in the grid)."""
+    with pytest.raises(ValueError, match="broadcast"):
+        CampaignSpec(name="bad", patterns=("feedback", "broadcast_gather"),
+                     tenants=(1, 2), consumers=(4,)).cells()
+    with pytest.raises(ValueError, match=r"\(6, 4\).*evenly divide"):
+        CampaignSpec(name="bad2", patterns=("feedback",),
+                     architectures=("dts", "mss"),
+                     consumers=(4, 6), tenants=(1, 4)).cells()
+    # run_campaign's upfront validation surfaces the same error
+    with pytest.raises(ValueError, match="evenly divide"):
+        run_campaign(CampaignSpec(name="bad3", patterns=("feedback",),
+                                  consumers=(6,), tenants=(4,)),
+                     workers=0)
+    # tenants=1 everywhere: unaffected
+    assert CampaignSpec(name="ok", patterns=("broadcast_gather",),
+                        consumers=(6,), tenants=(1,)).cells()
+
+
 def test_cell_key_versioned_and_distinct():
     c = CellSpec(pattern="work_sharing", arch="dts", workload="dstream",
                  n_consumers=4, total_messages=256, seed=0)
