@@ -33,10 +33,13 @@ from benchmarks import (
     bench_campaign, bench_deployment_feasibility, bench_engine_scaling,
     bench_fig4_work_sharing, bench_fig5_rtt_cdf, bench_fig6_feedback_rtt,
     bench_fig7_broadcast_gather, bench_fig8_bg_cdf,
-    bench_highspeed_projection, bench_kernels, bench_overflow_regime,
-    bench_payload_sweep, bench_roofline, bench_table1_workloads)
+    bench_highspeed_projection, bench_jax_engine, bench_kernels,
+    bench_overflow_regime, bench_payload_sweep, bench_roofline,
+    bench_table1_workloads)
 from benchmarks import common
 from benchmarks.common import Cache, LegacyCacheError
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 MODULES = [
     ("table1", bench_table1_workloads),
@@ -53,7 +56,26 @@ MODULES = [
     ("overflow_regime", bench_overflow_regime),
     ("campaign", bench_campaign),
     ("deployment_feasibility", bench_deployment_feasibility),
+    ("jax_engine", bench_jax_engine),
 ]
+
+
+def write_bench_json(name: str, rows: list, wall_s: float) -> str:
+    """Machine-readable companion to the CSV: one
+    ``results/BENCH_<name>.json`` per bench module (CI uploads them as
+    artifacts), mapping each cell name to its measured row."""
+    out = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = {
+        "module": name,
+        "wall_s": round(wall_s, 3),
+        "engine_override": common.DEFAULT_ENGINE,
+        "cells": {n: {"us_per_call": us, "derived": derived}
+                  for n, us, derived in rows},
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, allow_nan=True)
+    return out
 
 #: --campaign demo: a small paper-style grid (Fig 6 slice + tenants),
 #: including one overflow-regime cell (the dts/4-consumer cell gets a
@@ -110,22 +132,30 @@ def run_campaign_cli(args, cache: Cache) -> None:
           f"({res.n_cached} cached) in {res.wall_s:.1f}s -> {out}",
           file=sys.stderr)
     print("name,us_per_call,derived")
+    rows = []
     for s in res.averaged:
         us = (1e6 / s.throughput_msgs_s if s.feasible
               and s.throughput_msgs_s else float("nan"))
         tenant_tag = f"/t{s.tenants}" if s.tenants > 1 else ""
-        print(f"campaign/{spec.name}/{s.pattern}/{s.arch}/{s.workload}/"
-              f"c{s.n_consumers}{tenant_tag},{us:.1f},"
-              f"thr={s.throughput_msgs_s:.0f}msg/s n_runs={s.n_runs}")
+        name = (f"campaign/{spec.name}/{s.pattern}/{s.arch}/{s.workload}/"
+                f"c{s.n_consumers}{tenant_tag}")
+        derived = (f"thr={s.throughput_msgs_s:.0f}msg/s "
+                   f"n_runs={s.n_runs} engine={s.engine}")
+        print(f"{name},{us:.1f},{derived}")
+        rows.append((name, us, derived))
+    jpath = write_bench_json(f"campaign_{spec.name}", rows, res.wall_s)
+    print(f"# wrote {jpath}", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     help="run a single module (e.g. fig4, campaign)")
-    ap.add_argument("--engine", choices=("heap", "vectorized"), default=None,
+    ap.add_argument("--engine", choices=("heap", "vectorized", "jax"),
+                    default=None,
                     help="StreamSim backend for simulator cells "
-                         "(default: the SimParams default, vectorized)")
+                         "(default: the SimParams default, vectorized); "
+                         "'jax' falls back per cell when jax is missing")
     ap.add_argument("--campaign", default=None, metavar="SPEC",
                     help="execute a campaign grid: path to a "
                          "CampaignSpec JSON file, or a named grid "
@@ -154,10 +184,12 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         t0 = time.time()
-        for row in mod.run(cache):
-            n, us, derived = row
+        rows = [tuple(row) for row in mod.run(cache)]
+        for n, us, derived in rows:
             print(f"{n},{us:.1f},{derived}")
-        print(f"# {name} finished in {time.time() - t0:.1f}s",
+        wall = time.time() - t0
+        jpath = write_bench_json(name, rows, wall)
+        print(f"# {name} finished in {wall:.1f}s -> {jpath}",
               file=sys.stderr)
     cache.save()
 

@@ -138,6 +138,29 @@ class CampaignSpec:
     #: axis names a cell_params match may constrain
     AXES = ("pattern", "arch", "workload", "n_consumers", "tenants")
 
+    def __post_init__(self) -> None:
+        self._validate_engines()
+
+    def _validate_engines(self) -> None:
+        """Resolve every engine name the grid can select — ``params`` and
+        each ``cell_params`` override — at construction, so a typo like
+        ``engine="jaxx"`` fails here with the offending override named,
+        not as a bare SimParams error from deep inside the grid walk."""
+        from repro.core.simulator import get_engine
+        sources = [("params", self.params)]
+        sources += [(f"cell_params[{i}] (match={dict(m)!r})", o)
+                    for i, (m, o) in enumerate(self.cell_params)]
+        for where, ov in sources:
+            eng = ov.get("engine") if isinstance(ov, dict) else None
+            if eng is None:
+                continue
+            try:
+                get_engine(eng)
+            except ValueError as err:
+                raise ValueError(
+                    f"campaign {self.name!r}: {where} sets an invalid "
+                    f"engine: {err}") from None
+
     def _validate_tenant_grid(self) -> None:
         """A tenant sweep crosses *every* (pattern, arch, consumers)
         combination — reject the cross products that cannot mean

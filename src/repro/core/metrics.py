@@ -36,6 +36,11 @@ class Summary:
     n_runs: int = 1
     #: the cell's tenancy (paper §6 deployment study); 1 = single-user
     tenants: int = 1
+    #: the engine that actually ran the cell — may differ from the
+    #: requested one when ``run_many`` falls back (e.g. ``engine="jax"``
+    #: without jax installed runs on "vectorized"); "" when the result
+    #: predates the field
+    engine: str = ""
 
 
 def throughput_msgs_per_s(result: RunResult, warmup_frac: float = 0.05) -> float:
@@ -61,7 +66,8 @@ def summarize(result: RunResult) -> Summary:
                 rejected=result.rejected_publishes,
                 blocked=result.blocked_confirms,
                 n_messages=result.n_consumed,
-                tenants=spec.tenants)
+                tenants=spec.tenants,
+                engine=spec.params.engine)
     if not result.feasible:
         return s
     thr = throughput_msgs_per_s(result)

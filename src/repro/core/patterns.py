@@ -469,4 +469,7 @@ def average_summaries(ss: Sequence[Summary]) -> Summary:
     out.rejected = float(np.mean([s.rejected for s in feas]))
     out.blocked = float(np.mean([s.blocked for s in feas]))
     out.n_messages = int(np.mean([s.n_messages for s in feas]))
+    # surface a mixed-engine mean (e.g. some seeds fell back from jax)
+    engines = sorted({s.engine for s in feas if s.engine})
+    out.engine = engines[0] if len(engines) == 1 else "+".join(engines)
     return out

@@ -17,14 +17,17 @@ Flow control matches the paper's RabbitMQ configuration (§5.2):
 publisher-confirm windows, consumer prefetch (basic.qos), batch
 acknowledgements, reject-publish overflow with producer re-publish.
 
-Two engines implement the same experiment contract (the :class:`Engine`
-protocol): this module's heap engine (one event per hop — the reference),
-and the batched array engine in :mod:`repro.core.vectorized` that computes
-whole message cohorts with prefix-scan FIFO math.  The vectorized engine
-is the default; select via ``SimParams(engine="vectorized"|"heap")``
-(alias :data:`SimConfig`).  Both model the full flow-control stack,
-including credit-flow confirm withholding and reject-publish overflow
-with producer re-publish.
+Three engines implement the same experiment contract (the
+:class:`Engine` protocol): this module's heap engine (one event per hop
+— the reference), the batched array engine in
+:mod:`repro.core.vectorized` that computes whole message cohorts with
+prefix-scan FIFO math, and the JAX port of its hot kernels in
+:mod:`repro.core.jax_engine` (``jax.jit`` device programs, vmapped over
+stacked seed-lanes).  The vectorized engine is the default; select via
+``SimParams(engine="vectorized"|"heap"|"jax")`` (alias
+:data:`SimConfig`).  All model the full flow-control stack, including
+credit-flow confirm withholding and reject-publish overflow with
+producer re-publish.
 """
 
 from __future__ import annotations
@@ -72,7 +75,7 @@ class SimParams:
     #: per-data-queue byte cap (None = the broker's RAM-budget default).
     #: Small caps push the run into the reject-publish overflow regime.
     queue_max_bytes: Optional[int] = None
-    engine: str = "vectorized"      # "vectorized" (default) | "heap" (reference)
+    engine: str = "vectorized"  # "vectorized" (default) | "heap" | "jax"
     #: vectorized engine: per-producer messages per cohort round; must be a
     #: sub-multiple of the confirm window.  Smaller rounds interleave
     #: cross-flow traffic more finely (closer to the heap engine's event
@@ -686,6 +689,10 @@ def get_engine(name: str):
     """Resolve an engine name to its class, importing lazily."""
     if name not in ENGINES and name == "vectorized":
         import repro.core.vectorized  # noqa: F401  (registers itself)
+    if name not in ENGINES and name == "jax":
+        # the module imports (and registers) without jax installed;
+        # only constructing the engine needs jax
+        import repro.core.jax_engine  # noqa: F401  (registers itself)
     try:
         return ENGINES[name]
     except KeyError:

@@ -143,10 +143,13 @@ class _VecResource:
     ``(n, lanes)`` time arrays — same FIFO arithmetic per lane, with the
     pilot lane's arrival order deciding the (shared) service order."""
 
-    __slots__ = ("spec", "_free_pipe", "_free_pool")
+    __slots__ = ("spec", "_free_pipe", "_free_pool", "_scan")
 
-    def __init__(self, spec: ResourceSpec, lanes: int = 1):
+    def __init__(self, spec: ResourceSpec, lanes: int = 1, scan=None):
         self.spec = spec
+        #: the FIFO-scan kernel (``_fifo_scan`` or an engine-injected
+        #: port of it, e.g. the JAX engine's jitted scan)
+        self._scan = scan if scan is not None else _fifo_scan
         self._free_pipe = 0.0
         if spec.kind == "pool":
             k = max(1, spec.servers)
@@ -172,7 +175,7 @@ class _VecResource:
         a, h = t_arr[order], hold[order]
         end_sorted = np.empty_like(a)
         if self.spec.kind == "pipe":
-            end_sorted = _fifo_scan(a, h, self._free_pipe)
+            end_sorted = self._scan(a, h, self._free_pipe)
             self._free_pipe = (float(end_sorted[-1]) if a.ndim == 1
                                else end_sorted[-1].copy())
         else:
@@ -186,7 +189,7 @@ class _VecResource:
             k = carry.shape[0]
             n = a.shape[0]
             for c in range(min(k, n)):
-                end_sorted[c::k] = _fifo_scan(a[c::k], h[c::k], carry[c])
+                end_sorted[c::k] = self._scan(a[c::k], h[c::k], carry[c])
                 carry[c] = end_sorted[c + ((n - 1 - c) // k) * k]
             self._free_pool = carry
         out = np.empty_like(end_sorted)
@@ -240,6 +243,11 @@ class VectorizedStreamSim:
     #: bound on the memoized (flow, combos) -> resolved-paths cache
     COMBO_CACHE_MAX = 8192
 
+    #: the FIFO-scan kernel every busy-interval recurrence runs through
+    #: (resources and the consumer processing chains); subclass engines
+    #: (repro.core.jax_engine) swap in their own port
+    _scan_impl = staticmethod(_fifo_scan)
+
     def __init__(self, spec: ExperimentSpec,
                  inventory: Optional[ClusterInventory] = None,
                  arch: Optional[Architecture] = None,
@@ -274,7 +282,8 @@ class VectorizedStreamSim:
                              "params.seed")
         self._rngs = [np.random.default_rng(s) for s in self.stack_seeds]
         self.rng = self._rngs[0]
-        self.resources = {k: _VecResource(s, self._lanes)
+        self.resources = {k: _VecResource(s, self._lanes,
+                                          scan=self._scan_impl)
                           for k, s in self.arch.resources.items()}
         self._proc_s = (self.p.consumer_proc_s
                         if self.p.consumer_proc_s is not None
@@ -618,6 +627,24 @@ class VectorizedStreamSim:
             q["last_pop_t"][lane] = heapq.heappop(h)
             q["departed"][lane] += 1
 
+    def _next_drain(self, q: dict, lane: int) -> Optional[float]:
+        """Earliest recorded, not-yet-popped depart time on one lane
+        (``None`` when the lane has no known future drain).  The
+        depart-store read the admission retry logic keys on — engines
+        with a different store (the JAX engine's masked arrays) override
+        this and the pop methods, nothing else."""
+        h = q["depart_heap"][lane]
+        return h[0] if h else None
+
+    def _pop_to_target(self, q: dict, lane: int, target: int) -> None:
+        """Advance one lane's depart cursor until ``target`` total
+        releases have been popped (best effort — stops when no recorded
+        drain remains)."""
+        h = q["depart_heap"][lane]
+        while q["departed"][lane] < target and h:
+            q["last_pop_t"][lane] = heapq.heappop(h)
+            q["departed"][lane] += 1
+
     def _record_departs(self, q: dict, departs: np.ndarray) -> None:
         """Register released deliveries' depart times (each lane's column
         into that lane's heap); resolves any credit-flow-deferred
@@ -640,10 +667,7 @@ class VectorizedStreamSim:
         with no further known drains the last release stands) and return
         the crossing depart time + control latency."""
         target = q["n_enq"][lane] - q["credit"] // 2
-        h = q["depart_heap"][lane]
-        while q["departed"][lane] < target and h:
-            q["last_pop_t"][lane] = heapq.heappop(h)
-            q["departed"][lane] += 1
+        self._pop_to_target(q, lane, target)
         return float(q["last_pop_t"][lane]) + self.arch.control_latency_s()
 
     def _try_resume(self, q: dict, force: bool = False) -> bool:
@@ -661,10 +685,7 @@ class VectorizedStreamSim:
         target = int(q["n_enq"][0]) - q["credit"] // 2
         if q["released"] < target and not force:
             return False
-        h = q["depart_heap"][0]
-        while q["departed"][0] < target and h:
-            q["last_pop_t"][0] = heapq.heappop(h)
-            q["departed"][0] += 1
+        self._pop_to_target(q, 0, target)
         t_resume = float(q["last_pop_t"][0]) + self.arch.control_latency_s()
         resolvers, q["deferred"] = q["deferred"], []
         for fn in resolvers:
@@ -698,8 +719,8 @@ class VectorizedStreamSim:
                     break
             if full_q is None:
                 break
-            h = full_q["depart_heap"][lane]
-            if not h:
+            nd = self._next_drain(full_q, lane)
+            if nd is None:
                 # no known future drain: count this failed attempt and
                 # admit on the next one rather than spinning forever —
                 # the one admission that may push a lane's backlog past
@@ -712,7 +733,7 @@ class VectorizedStreamSim:
                 break
             # every retry until the next known drain fails too: jump the
             # retry cadence straight past it
-            k = max(1, int(np.ceil((h[0] - t) / p.publish_retry_s)))
+            k = max(1, int(np.ceil((nd - t) / p.publish_retry_s)))
             extra += k
             t += k * p.publish_retry_s
         blocked_on = None
@@ -784,33 +805,53 @@ class VectorizedStreamSim:
                         q["n_enq"][lane] - q["departed"][lane])
                 accept[att, lane] = True
                 continue
-            for k in np.nonzero(att)[0][np.argsort(tl, kind="stable")]:
-                t = float(T[k, lane])
-                full = False
-                for q in tracked:
-                    self._pop_lane(q, lane, t)
-                    if (q["cap"] is not None
-                            and q["n_enq"][lane] - q["departed"][lane]
-                            >= q["cap"]):
-                        full = True
-                        break
-                if full:
-                    continue
-                accept[k, lane] = True
-                for q in tracked:
-                    q["n_enq"][lane] += 1
-                    q["hwm"][lane] = max(
-                        q["hwm"][lane],
-                        q["n_enq"][lane] - q["departed"][lane])
-                for q in tracked:
-                    if (q["credit"] is not None
-                            and q["n_enq"][lane] - q["departed"][lane]
-                            > q["credit"]):
-                        if blocked_on is None:
-                            blocked_on = np.full((n, L), None, dtype=object)
-                        blocked_on[k, lane] = q
-                        break
+            ks = np.nonzero(att)[0][np.argsort(tl, kind="stable")]
+            admitted, blocked = self._admit_walk(tracked, lane, ks, T)
+            accept[admitted, lane] = True
+            for k, q in blocked:
+                if blocked_on is None:
+                    blocked_on = np.full((n, L), None, dtype=object)
+                blocked_on[k, lane] = q
         return accept, blocked_on
+
+    def _admit_walk(self, tracked: list, lane: int, ks: np.ndarray,
+                    T: np.ndarray) -> tuple[np.ndarray, list]:
+        """One lane's per-message arrival-order admission walk (the heap
+        engine's ``offer()``/``flow_blocked`` sequence): members ``ks``
+        — already sorted by this lane's arrival time — are admitted
+        unless a tracked queue's backlog sits at its byte cap at the
+        member's arrival clock; each admission bumps every target's
+        enqueue count and high-water mark, and the first credit
+        threshold it crosses is recorded.  Returns ``(admitted_members,
+        [(member, blocking_queue), ...])``.  The JAX engine overrides
+        this with a ``lax.scan`` over the same recurrence."""
+        admitted = []
+        blocked = []
+        for k in ks:
+            t = float(T[k, lane])
+            full = False
+            for q in tracked:
+                self._pop_lane(q, lane, t)
+                if (q["cap"] is not None
+                        and q["n_enq"][lane] - q["departed"][lane]
+                        >= q["cap"]):
+                    full = True
+                    break
+            if full:
+                continue
+            admitted.append(int(k))
+            for q in tracked:
+                q["n_enq"][lane] += 1
+                q["hwm"][lane] = max(
+                    q["hwm"][lane],
+                    q["n_enq"][lane] - q["departed"][lane])
+            for q in tracked:
+                if (q["credit"] is not None
+                        and q["n_enq"][lane] - q["departed"][lane]
+                        > q["credit"]):
+                    blocked.append((int(k), q))
+                    break
+        return np.asarray(admitted, dtype=int), blocked
 
     # -- batch event loop ------------------------------------------------------
     def _push_transit(self, t0: np.ndarray, size: int, flow: str,
@@ -1031,6 +1072,33 @@ class VectorizedStreamSim:
                              "t": t_ready[o], "pos": 0})
         self._pump_queues([qkey])
 
+    def _rr_assign(self, ids: list, t_sl: np.ndarray, P: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Strict round-robin split of one whole released segment across
+        consumers with open windows (the pump fast path): message ``r``
+        goes to ``ids[r % k]`` and its depart gates on the ack that
+        freed its basic.qos window slot.  Advances each channel's
+        assigned cursor.  Returns ``(consumer_ids, delivery_tags,
+        depart_times)``.  The JAX engine overrides the gate/depart
+        arithmetic with one fused device computation."""
+        n_rem = t_sl.shape[0]
+        k = len(ids)
+        cons = np.array(ids)[np.arange(n_rem) % k]
+        j_all = np.empty(n_rem, dtype=int)
+        depart = np.empty(t_sl.shape)
+        for r, c in enumerate(ids):
+            pos = np.arange(r, n_rem, k)
+            ch = self._chan(c)
+            self._chan_grow(ch, pos.size)
+            j = ch["assigned"] + np.arange(pos.size)
+            gate = np.full(t_sl[pos].shape, -np.inf)
+            m_g = j >= P
+            gate[m_g] = ch["ack_time"][j[m_g] - P]
+            j_all[pos] = j
+            depart[pos] = np.maximum(t_sl[pos], gate)
+            ch["assigned"] += pos.size
+        return cons, j_all, depart
+
     def _pump_queues(self, qkeys) -> None:
         """Release every window-admissible pending delivery on the given
         queues and push the released groups as transit batches."""
@@ -1053,20 +1121,7 @@ class VectorizedStreamSim:
                             for r, c in enumerate(ids)):
                     sl = slice(seg["pos"], seg["pos"] + n_rem)
                     t_sl, m_sl = seg["t"][sl], seg["idx"][sl]
-                    cons = np.array(ids)[np.arange(n_rem) % k]
-                    j_all = np.empty(n_rem, dtype=int)
-                    depart = np.empty(t_sl.shape)
-                    for r, c in enumerate(ids):
-                        pos = np.arange(r, n_rem, k)
-                        ch = self._chan(c)
-                        self._chan_grow(ch, pos.size)
-                        j = ch["assigned"] + np.arange(pos.size)
-                        gate = np.full(t_sl[pos].shape, -np.inf)
-                        m_g = j >= P
-                        gate[m_g] = ch["ack_time"][j[m_g] - P]
-                        j_all[pos] = j
-                        depart[pos] = np.maximum(t_sl[pos], gate)
-                        ch["assigned"] += pos.size
+                    cons, j_all, depart = self._rr_assign(ids, t_sl, P)
                     q["consumers"] = ids = ids[n_rem % k:] + ids[:n_rem % k]
                     releases.setdefault(id(seg["cohort"]), []).append(
                         (seg["cohort"], m_sl, cons, j_all, depart))
@@ -1085,47 +1140,8 @@ class VectorizedStreamSim:
                 # stays closed, and the round-robin skips it.  Released
                 # in small chunks so ack arrivals (the commits that
                 # re-pump this queue) interleave with the assignment.
-                chunk = max(1, self.p.ack_batch)
-                chans = [self._chan(c) for c in ids]
-                # next-assignment window gate per consumer (NaN = the ack
-                # that would re-open it hasn't been computed yet); in
-                # stacked mode one gate vector per lane, decisions on the
-                # pilot lane's column
-                gshape = ((len(ids),) if self._lanes == 1
-                          else (len(ids), self._lanes))
-                g = np.empty(gshape)
-                for x, ch in enumerate(chans):
-                    j = ch["assigned"]
-                    g[x] = -np.inf if j < P else ch["ack_time"][j - P]
-                order = np.arange(len(ids))     # rotated round-robin
-                rel = []
-                while seg["pos"] < seg["idx"].size and len(rel) < chunk:
-                    tv = seg["t"][seg["pos"]]
-                    t = float(_lane0(seg["t"])[seg["pos"]])
-                    go = g[order]
-                    go0 = _lane0(go)
-                    with np.errstate(invalid="ignore"):
-                        open_pos = np.nonzero(go0 <= t)[0]
-                    if open_pos.size:
-                        pos = int(open_pos[0])
-                    else:
-                        finite = np.isfinite(go0)
-                        if not finite.any():
-                            break   # re-openings unknown: wait for acks
-                        pos = int(np.argmin(np.where(finite, go0, np.inf)))
-                    gate = go[pos]
-                    x = int(order[pos])
-                    order = np.append(np.delete(order, pos), x)
-                    ch = chans[x]
-                    self._chan_grow(ch, 1)
-                    j = ch["assigned"]
-                    ch["assigned"] += 1
-                    g[x] = (-np.inf if j + 1 < P
-                            else ch["ack_time"][j + 1 - P])
-                    rel.append((seg["idx"][seg["pos"]], ids[x], j,
-                                np.maximum(tv, gate)))
-                    seg["pos"] += 1
-                q["consumers"] = ids = [ids[x] for x in order]
+                rel, ids = self._assign_chunk(seg, ids, P)
+                q["consumers"] = ids
                 if rel:
                     rel_depart = np.array([r[3] for r in rel])
                     releases.setdefault(id(seg["cohort"]), []).append(
@@ -1154,6 +1170,58 @@ class VectorizedStreamSim:
                     self._commit(cohort, idx[members], j_all[members],
                                  cons[members], t))
 
+    def _assign_chunk(self, seg: dict, ids: list, P: int
+                      ) -> tuple[list, list]:
+        """One slow-path assignment chunk: per message, the heap
+        broker's ``next_delivery`` in virtual time — the first consumer
+        (rotated round-robin) whose basic.qos window is open at the
+        message's ready time takes it; with every window closed, the
+        earliest known re-opening takes the delivery.  Consumes up to
+        ``ack_batch`` messages off ``seg``; returns ``(released,
+        rotated_ids)`` where each released entry is ``(member_idx,
+        consumer, delivery_tag, depart)``.  The JAX engine overrides
+        this with a ``lax.scan`` over the same selection recurrence."""
+        chunk = max(1, self.p.ack_batch)
+        chans = [self._chan(c) for c in ids]
+        # next-assignment window gate per consumer (NaN = the ack that
+        # would re-open it hasn't been computed yet); in stacked mode one
+        # gate vector per lane, decisions on the pilot lane's column
+        gshape = ((len(ids),) if self._lanes == 1
+                  else (len(ids), self._lanes))
+        g = np.empty(gshape)
+        for x, ch in enumerate(chans):
+            j = ch["assigned"]
+            g[x] = -np.inf if j < P else ch["ack_time"][j - P]
+        order = np.arange(len(ids))     # rotated round-robin
+        rel = []
+        while seg["pos"] < seg["idx"].size and len(rel) < chunk:
+            tv = seg["t"][seg["pos"]]
+            t = float(_lane0(seg["t"])[seg["pos"]])
+            go = g[order]
+            go0 = _lane0(go)
+            with np.errstate(invalid="ignore"):
+                open_pos = np.nonzero(go0 <= t)[0]
+            if open_pos.size:
+                pos = int(open_pos[0])
+            else:
+                finite = np.isfinite(go0)
+                if not finite.any():
+                    break   # re-openings unknown: wait for acks
+                pos = int(np.argmin(np.where(finite, go0, np.inf)))
+            gate = go[pos]
+            x = int(order[pos])
+            order = np.append(np.delete(order, pos), x)
+            ch = chans[x]
+            self._chan_grow(ch, 1)
+            j = ch["assigned"]
+            ch["assigned"] += 1
+            g[x] = (-np.inf if j + 1 < P
+                    else ch["ack_time"][j + 1 - P])
+            rel.append((seg["idx"][seg["pos"]], ids[x], j,
+                        np.maximum(tv, gate)))
+            seg["pos"] += 1
+        return rel, [ids[x] for x in order]
+
     def _commit(self, cohort: dict, cidx: np.ndarray, j: np.ndarray,
                 chan: np.ndarray, t_land: np.ndarray) -> None:
         """Some released deliveries landed: run the consumer processing
@@ -1171,7 +1239,7 @@ class VectorizedStreamSim:
                 # serial parse/handle chain on the consumer client
                 o = m[np.argsort(_lane0(t_land)[m], kind="stable")]
                 proc = self._proc_s * (1.0 + self._jit(o.size))
-                ends = _fifo_scan(t_land[o] + recv, proc, ch["free"])
+                ends = self._scan_impl(t_land[o] + recv, proc, ch["free"])
                 seen[o] = ends
                 ch["free"] = (float(ends[-1]) if ends.ndim == 1
                               else ends[-1].copy())
@@ -1862,42 +1930,61 @@ def run_many(specs, inventory=None) -> list:
     pattern/arch/consumer-count/knobs) and heap-engine cells fall back
     to per-cell solo execution.
 
+    ``engine="jax"`` cells stack the same way (the JAX engine shares the
+    stacked-lane contract); cells the JAX engine cannot take — JAX not
+    importable, or an unsupported cell shape — fall back to the
+    vectorized engine, recorded per cell in the result's
+    ``spec.params.engine`` (campaign summaries surface it as
+    ``Summary.engine``).
+
     Infeasible specs come back as ``feasible=False`` results, like
     :func:`~repro.core.simulator.run_experiment`.  Returns one
     :class:`RunResult` per spec, in input order."""
-    from repro.core.simulator import run_experiment
+    import dataclasses
+
+    from repro.core.simulator import get_engine, run_experiment
+    specs = list(specs)
     results: list = [None] * len(specs)
+    for i, spec in enumerate(specs):
+        if spec.params.engine == "jax":
+            from repro.core import jax_engine
+            ok, _why = jax_engine.jax_supported(spec)
+            if not ok:
+                specs[i] = dataclasses.replace(
+                    spec, params=dataclasses.replace(
+                        spec.params, engine="vectorized"))
     groups: dict = {}
     for i, spec in enumerate(specs):
-        if spec.params.engine == "vectorized":
+        if spec.params.engine in ("vectorized", "jax"):
+            # engine is part of params, so the key never mixes engines
             groups.setdefault(_stack_key(spec), []).append(i)
         else:
             groups[("solo", i)] = [i]
     for idxs in groups.values():
         stack = len(idxs) > 1
-        if stack:
-            # one probe per group: feasibility is structural, identical
-            # across the seeds
-            try:
-                VectorizedStreamSim(specs[idxs[0]], inventory)
-            except InfeasibleConfiguration as e:
-                for i in idxs:
-                    results[i] = RunResult(spec=specs[i], feasible=False,
-                                           infeasible_reason=str(e))
-                continue
         if not stack:
             for i in idxs:
                 results[i] = run_experiment(specs[i], inventory)
             continue
-        for lo in range(0, len(idxs), STACK_MAX_LANES):
-            chunk = idxs[lo:lo + STACK_MAX_LANES]
+        cls = get_engine(specs[idxs[0]].params.engine)
+        # one probe per group: feasibility is structural, identical
+        # across the seeds
+        try:
+            cls(specs[idxs[0]], inventory)
+        except InfeasibleConfiguration as e:
+            for i in idxs:
+                results[i] = RunResult(spec=specs[i], feasible=False,
+                                       infeasible_reason=str(e))
+            continue
+        max_lanes = getattr(cls, "STACK_MAX_LANES", STACK_MAX_LANES)
+        for lo in range(0, len(idxs), max_lanes):
+            chunk = idxs[lo:lo + max_lanes]
             if len(chunk) == 1:
                 results[chunk[0]] = run_experiment(specs[chunk[0]],
                                                    inventory)
                 continue
             seeds = [specs[i].params.seed for i in chunk]
-            sim = VectorizedStreamSim(specs[chunk[0]], inventory,
-                                      stack_seeds=seeds)
+            sim = cls(specs[chunk[0]], inventory, stack_seeds=seeds)
             for i, r in zip(chunk, sim.run_stacked()):
                 results[i] = r
     return results

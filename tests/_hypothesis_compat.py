@@ -69,6 +69,8 @@ except ImportError:  # pragma: no cover - depends on environment
 
     def given(**strategies):
         def deco(fn):
+            import inspect
+
             def wrapper(*args, **kwargs):
                 # read from the wrapper: @settings is usually stacked
                 # *above* @given and annotates the wrapped function
@@ -82,6 +84,14 @@ except ImportError:  # pragma: no cover - depends on environment
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__
+            # expose only the *non*-strategy parameters, so stacking
+            # @pytest.mark.parametrize above @given keeps working (pytest
+            # resolves fixtures/params from the visible signature), while
+            # the drawn strategy arguments stay hidden from it
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
             wrapper._compat_max_examples = getattr(
                 fn, "_compat_max_examples", 20)
             return wrapper

@@ -343,3 +343,26 @@ def test_campaign_infeasible_cells_reported():
     res = run_campaign(spec, workers=0)
     assert all(not s.feasible for s in res.summaries)
     assert not res.averaged[0].feasible and res.averaged[0].n_runs == 0
+
+
+def test_campaign_engine_validated_at_construction():
+    # a bad engine name fails when the spec is built, naming the source,
+    # not as a bare SimParams error from deep inside run_campaign
+    with pytest.raises(ValueError,
+                       match=r"campaign 'bad'.*params.*unknown engine 'jaxx'"):
+        CampaignSpec(name="bad", params={"engine": "jaxx"})
+    with pytest.raises(
+            ValueError,
+            match=r"cell_params\[1\].*'arch': 'mss'.*unknown engine 'nope'"):
+        CampaignSpec(name="bad2",
+                     cell_params=[({"arch": "dts"}, {"prefetch": 2}),
+                                  ({"arch": "mss"}, {"engine": "nope"})])
+    # every registered name (importable without constructing) is fine
+    ok = CampaignSpec(name="ok", params={"engine": "jax"},
+                      cell_params=[({"arch": "dts"}, {"engine": "heap"})])
+    assert ok.cells()
+    # the from_json path re-validates too
+    with pytest.raises(ValueError, match="unknown engine"):
+        CampaignSpec.from_json(
+            CampaignSpec(name="rt").to_json().replace(
+                '"params": {}', '"params": {"engine": "typo"}'))

@@ -22,13 +22,28 @@ The invariants under test, per stacked seed-lane:
 """
 
 import numpy as np
+import pytest
 
 from _hypothesis_compat import given, settings, st
 
+from repro.core.jax_engine import jax_available
 from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
 from repro.core.simulator import ExperimentSpec, SimParams, run_experiment
 from repro.core.vectorized import VectorizedStreamSim, _fifo_scan
 from repro.core.workloads import get_workload
+
+#: every lane-resolved invariant below holds for each batched engine;
+#: the jax engine swaps the kernel layer only (masked depart stores,
+#: device admission scan), so it rides the same properties
+VEC_ENGINES = (("vectorized", "jax") if jax_available()
+               else ("vectorized",))
+
+
+def _engine_cls(engine):
+    if engine == "jax":
+        from repro.core.jax_engine import JaxStreamSim
+        return JaxStreamSim
+    return VectorizedStreamSim
 
 
 def _overflow_spec(seed, cap_msgs, msgs, nc=2):
@@ -72,14 +87,15 @@ def test_fifo_scan_lane_axis_matches_per_lane(holds, gaps, scales, carry):
 # -- admission-path unit properties ----------------------------------------
 
 
-def _mini_sim(n_lanes):
+def _mini_sim(n_lanes, engine="vectorized"):
     spec = ExperimentSpec(
         pattern="work_sharing", workload=get_workload("dstream"),
         arch="dts", n_producers=2, n_consumers=2, total_messages=64,
-        params=SimParams(seed=0))
-    return VectorizedStreamSim(spec, stack_seeds=list(range(n_lanes)))
+        params=SimParams(seed=0, engine=engine))
+    return _engine_cls(engine)(spec, stack_seeds=list(range(n_lanes)))
 
 
+@pytest.mark.parametrize("engine", VEC_ENGINES)
 @settings(max_examples=25)
 @given(cap=st.integers(min_value=2, max_value=12),
        lanes=st.integers(min_value=1, max_value=3),
@@ -88,13 +104,13 @@ def _mini_sim(n_lanes):
                     min_size=1, max_size=12),
            min_size=1, max_size=6),
        drain_frac=st.floats(min_value=0.0, max_value=1.0))
-def test_enqueue_batch_per_lane_cap_and_conservation(cap, lanes, batches,
-                                                     drain_frac):
+def test_enqueue_batch_per_lane_cap_and_conservation(engine, cap, lanes,
+                                                     batches, drain_frac):
     """Feeding arbitrary enqueue cohorts (with partial drains recorded
     in between) through ``_enqueue_batch`` never lets any lane's
     backlog — or its recorded high-water mark — exceed the byte cap,
     and per lane attempted == admitted + rejected at every step."""
-    sim = _mini_sim(lanes)
+    sim = _mini_sim(lanes, engine)
     q = sim._queue_state(("prop", 0), [0], 100, credit=3 * cap,
                          cap_msgs=cap)
     rng = np.random.default_rng(0)
@@ -126,18 +142,21 @@ def test_enqueue_batch_per_lane_cap_and_conservation(cap, lanes, batches,
 # -- whole-run lane invariants under overflow ------------------------------
 
 
+@pytest.mark.parametrize("engine", VEC_ENGINES)
 @settings(max_examples=5, deadline=None)
 @given(seeds=st.lists(st.integers(min_value=1, max_value=10_000),
                       min_size=1, max_size=3),
        cap_msgs=st.integers(min_value=48, max_value=128),
        msgs=st.sampled_from((256, 512)))
-def test_stacked_overflow_lane_invariants(seeds, cap_msgs, msgs):
+def test_stacked_overflow_lane_invariants(engine, seeds, cap_msgs, msgs):
     """Whole-run invariants of a stacked overflow cell, per lane:
     conservation, non-negative lane-resolved counters, positive RTTs,
     confirm causality + full confirm resolution, backlog high-water
-    marks within the cap, drained queues, and a bit-identical pilot."""
+    marks within the cap, drained queues, and a bit-identical pilot
+    (the solo reference stays on the vectorized engine, so the jax
+    param also pins jax-pilot == numpy-solo bit-identity)."""
     spec = _overflow_spec(0, cap_msgs, msgs)
-    sim = VectorizedStreamSim(spec, stack_seeds=[0] + seeds)
+    sim = _engine_cls(engine)(spec, stack_seeds=[0] + seeds)
     results = sim.run_stacked()
     solo = run_experiment(spec)
     # pilot invariance: the admission path collapses to the solo one
@@ -171,10 +190,11 @@ def test_stacked_overflow_lane_invariants(seeds, cap_msgs, msgs):
             assert (q["hwm"] <= q["cap"] + q["forced"]).all()
 
 
+@pytest.mark.parametrize("engine", VEC_ENGINES)
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10_000),
        nc=st.sampled_from((2, 4)))
-def test_no_flow_events_means_zero_counters_every_lane(seed, nc):
+def test_no_flow_events_means_zero_counters_every_lane(engine, seed, nc):
     """With no byte cap and no reachable credit threshold, every lane's
     flow-control counters must be exactly zero (the lane-resolved
     admission path must not invent events)."""
@@ -182,8 +202,8 @@ def test_no_flow_events_means_zero_counters_every_lane(seed, nc):
     spec = ExperimentSpec(
         pattern="work_sharing", workload=wl, arch="dts", n_producers=nc,
         n_consumers=nc, total_messages=512,
-        params=SimParams(seed=seed))
-    sim = VectorizedStreamSim(spec, stack_seeds=[seed, seed + 1,
+        params=SimParams(seed=seed, engine=engine))
+    sim = _engine_cls(engine)(spec, stack_seeds=[seed, seed + 1,
                                                  seed + 2])
     assert not sim.flow_events_possible()
     for r in sim.run_stacked():

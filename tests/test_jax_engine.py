@@ -1,0 +1,210 @@
+"""Jit-boundary unit tests for the JAX engine (``engine="jax"``):
+
+* ``_fifo_scan`` NumPy-vs-JAX elementwise equality on hypothesis
+  inputs, solo and lane-stacked — the scan is the same float64 closed
+  form (cumsum + running max), so the two engines may differ only by
+  re-association noise;
+* the **pad-and-mask contract**: pow2 padding with inert values (+inf
+  arrivals, zero holds, consumed depart rows) never perturbs a real
+  lane — at the kernel level and for whole stacked runs (adding a
+  seed-lane leaves the existing lanes bit-identical);
+* **scoped x64**: engine kernels compute in float64 with full
+  time-arithmetic resolution (a 1e-4 s hold survives a 1e3 s clock)
+  while the process-global JAX default stays x32 for the model stack;
+* ``run_many``'s per-cell fallback when jax is unavailable, recorded
+  on the result (``Summary.engine``).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import jax_engine
+from repro.core.jax_engine import _pow2, jax_available, jax_supported
+from repro.core.metrics import summarize
+from repro.core.simulator import ExperimentSpec, SimParams
+from repro.core.vectorized import _fifo_scan, run_many
+from repro.core.workloads import get_workload
+
+requires_jax = pytest.mark.skipif(not jax_available(),
+                                  reason="jax not installed")
+
+
+def _spec(seed, engine="jax", msgs=256, nc=2):
+    return ExperimentSpec(
+        pattern="feedback", workload=get_workload("dstream"), arch="dts",
+        n_producers=nc, n_consumers=nc, total_messages=msgs,
+        params=SimParams(seed=seed, engine=engine))
+
+
+# -- shape bucketing --------------------------------------------------------
+
+
+def test_pow2_buckets():
+    assert [_pow2(n) for n in (0, 1, 2, 3, 4, 5, 17, 64)] == \
+        [1, 1, 2, 4, 4, 8, 32, 64]
+
+
+# -- _fifo_scan: numpy vs jax elementwise ----------------------------------
+
+
+@requires_jax
+@settings(max_examples=40)
+@given(holds=st.lists(st.floats(min_value=0.0, max_value=5.0),
+                      min_size=1, max_size=33),
+       gaps=st.lists(st.floats(min_value=0.0, max_value=3.0),
+                     min_size=1, max_size=33),
+       carry=st.floats(min_value=0.0, max_value=20.0))
+def test_jax_fifo_scan_matches_numpy_1d(holds, gaps, carry):
+    """Sizes 1..33 sweep across pow2 pad boundaries, so this is also
+    the kernel-level pad-and-mask invariance check."""
+    n = min(len(holds), len(gaps))
+    a = np.cumsum(np.asarray(gaps[:n]))
+    h = np.asarray(holds[:n])
+    got = jax_engine._jax_fifo_scan(a, h, carry)
+    want = _fifo_scan(a, h, carry)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@requires_jax
+@settings(max_examples=25)
+@given(holds=st.lists(st.floats(min_value=0.0, max_value=5.0),
+                      min_size=1, max_size=20),
+       gaps=st.lists(st.floats(min_value=0.0, max_value=3.0),
+                     min_size=1, max_size=20),
+       scales=st.lists(st.floats(min_value=0.5, max_value=2.0),
+                       min_size=2, max_size=5),
+       carry=st.floats(min_value=0.0, max_value=10.0))
+def test_jax_fifo_scan_matches_numpy_lane_axis(holds, gaps, scales, carry):
+    n = min(len(holds), len(gaps))
+    sc = np.asarray(scales)
+    a = np.cumsum(np.asarray(gaps[:n]))[:, None] * sc[None, :]
+    h = np.asarray(holds[:n])[:, None] * sc[None, :]
+    got = jax_engine._jax_fifo_scan(a, h, carry * sc)
+    want = _fifo_scan(a, h, carry * sc)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@requires_jax
+def test_jax_fifo_scan_broadcasts_scalar_hold_and_carry():
+    a = np.array([[0.0, 0.0], [1.0, 2.0], [1.5, 4.0]])
+    got = jax_engine._jax_fifo_scan(a, 0.5, 0.0)
+    want = _fifo_scan(a, np.full_like(a, 0.5), np.zeros(2))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+# -- pad-and-mask invariance -----------------------------------------------
+
+
+@requires_jax
+def test_kernel_pads_are_inert():
+    """Explicitly widening a kernel call with its documented pad values
+    leaves the real prefix bit-identical."""
+    K = jax_engine._kernels()
+    rng = np.random.default_rng(1)
+    a = np.sort(rng.uniform(0, 10, (8, 3)), axis=0)
+    h = rng.uniform(0, 1e-3, (8, 3))
+    c = np.zeros(3)
+    base = np.asarray(K.fifo_scan_lanes(a, h, c))
+    ap = np.vstack([a, np.full((8, 3), np.inf)])
+    hp = np.vstack([h, np.zeros((8, 3))])
+    wide = np.asarray(K.fifo_scan_lanes(ap, hp, c))[:8]
+    assert np.array_equal(base, wide)
+    # masked depart pops: consumed +inf pad rows never count
+    t = np.array([1.0, 3.0, 5.0, np.inf])
+    used = np.array([False, False, False, True])
+    cnt, last, used2 = K.pop_until(t, used, 4.0)
+    assert int(cnt) == 2 and float(last) == 3.0
+    assert np.asarray(used2).tolist() == [True, True, False, True]
+    t2 = np.concatenate([t, np.full(4, np.inf)])
+    u2 = np.concatenate([used, np.ones(4, dtype=bool)])
+    cnt2, last2, _ = K.pop_until(t2, u2, 4.0)
+    assert int(cnt2) == 2 and float(last2) == 3.0
+    assert float(K.next_drain(t, used)) == 1.0
+
+
+@requires_jax
+def test_added_seed_lane_never_perturbs_existing_lanes():
+    """Whole-run pad-and-mask invariance: stacking one more seed-lane
+    leaves the existing lanes' trajectories bit-identical (overflow
+    regime included, so the masked depart store and the admission scan
+    both face real flow-control traffic)."""
+    from repro.core.patterns import OVERFLOW_STRESS_DEFAULTS
+    wl = get_workload("dstream")
+    spec = ExperimentSpec(
+        pattern="feedback", workload=wl, arch="dts", n_producers=2,
+        n_consumers=2, total_messages=512,
+        params=SimParams(seed=0, engine="jax",
+                         queue_max_bytes=64 * wl.payload_bytes,
+                         **OVERFLOW_STRESS_DEFAULTS))
+    two = jax_engine.JaxStreamSim(spec, stack_seeds=[0, 7]).run_stacked()
+    three = jax_engine.JaxStreamSim(
+        spec, stack_seeds=[0, 7, 99]).run_stacked()
+    for i in range(2):
+        assert np.array_equal(two[i].consume_times,
+                              three[i].consume_times), i
+        assert two[i].rejected_publishes == three[i].rejected_publishes
+        assert two[i].blocked_confirms == three[i].blocked_confirms
+
+
+# -- scoped x64 -------------------------------------------------------------
+
+
+@requires_jax
+def test_x64_time_arithmetic_roundtrip_without_global_flip():
+    import jax
+    import jax.numpy as jnp
+    global_x64 = jax.config.jax_enable_x64
+    # large-magnitude clocks: a 1e-4 s hold on a 1e3 s base survives
+    # only in float64 (f32 resolution at 1e3 is ~6e-5 and accumulates)
+    a = 1e3 + np.cumsum(np.full(32, 1e-4))
+    h = np.full(32, 1e-4)
+    got = jax_engine._jax_fifo_scan(a, h, 1e3)
+    assert got.dtype == np.float64
+    np.testing.assert_allclose(got, _fifo_scan(a, h, 1e3), rtol=0,
+                               atol=1e-12)
+    assert np.all(np.diff(got) > 0)          # holds never vanish
+    # the engine's x64 is scoped per call: the process-global default
+    # (the model/kernel stack's x32) is untouched
+    assert jax.config.jax_enable_x64 == global_x64
+    if not global_x64:
+        assert jnp.asarray(1.0).dtype == jnp.float32
+
+
+# -- engine selection, fallback recording ----------------------------------
+
+
+@requires_jax
+def test_jax_engine_runs_and_records_engine():
+    rs = run_many([_spec(0), _spec(1)])
+    for r, seed in zip(rs, (0, 1)):
+        assert r.feasible and r.n_consumed == 256
+        s = summarize(r)
+        assert s.engine == "jax", seed
+
+
+def test_run_many_falls_back_and_records_vectorized(monkeypatch):
+    """Without importable jax, run_many reroutes jax cells to the
+    vectorized engine and the results say so."""
+    monkeypatch.setattr(jax_engine, "jax_available", lambda: False)
+    ok, why = jax_supported(_spec(0))
+    assert not ok and "jax" in why
+    rs = run_many([_spec(0)])
+    assert rs[0].feasible
+    assert rs[0].spec.params.engine == "vectorized"
+    assert summarize(rs[0]).engine == "vectorized"
+
+
+@requires_jax
+def test_jax_matches_vectorized_bitwise_on_smoke_cell():
+    """The jax engine is a kernel-layer port of the same arithmetic:
+    on a smoke cell the two engines agree to the last bit."""
+    j = run_many([_spec(0, "jax")])[0]
+    v = run_many([_spec(0, "vectorized")])[0]
+    np.testing.assert_allclose(j.consume_times, v.consume_times,
+                               rtol=1e-9)
+    np.testing.assert_allclose(j.rtts, v.rtts, rtol=1e-9)
+    assert j.rejected_publishes == v.rejected_publishes
+    assert j.blocked_confirms == v.blocked_confirms

@@ -37,6 +37,7 @@ CORE_TESTS = [
     "tests/test_core_system.py", "tests/test_engine_parity.py",
     "tests/test_campaign.py", "tests/test_multi_tenant.py",
     "tests/test_flow_control_props.py", "tests/test_bench_cache.py",
+    "tests/test_jax_engine.py",
 ]
 
 
