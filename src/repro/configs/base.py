@@ -9,7 +9,6 @@ in this package exporting ``CONFIG`` (full size, dry-run only) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

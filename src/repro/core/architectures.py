@@ -32,10 +32,14 @@ measured figures live in :class:`Calibration` with provenance notes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 from repro.core.ds2hpc import ClusterInventory
 from repro.core.workloads import GBIT
+
+if TYPE_CHECKING:
+    from repro.core.s3m import ManagedCluster
+    from repro.core.scistream import StreamingSession
 
 
 # --------------------------------------------------------------------------
@@ -188,7 +192,7 @@ class Architecture:
     tenant_paths: bool = False
 
     def __init__(self, inventory: Optional[ClusterInventory] = None,
-                 cal: Optional[Calibration] = None):
+                 cal: Optional[Calibration] = None) -> None:
         self.inv = inventory or ClusterInventory()
         self.cal = cal or DEFAULT_CALIBRATION
         self._specs: dict[str, ResourceSpec] = {}
@@ -379,8 +383,8 @@ class DirectStreaming(Architecture):
                 f"ttun:{t}", "pool", servers=2, service_s=svc,
                 per_byte_s=8.0 / (c.dts_tenant_tunnel_gbps * GBIT)))
 
-    def publish_path(self, producer_node, broker_node, home_node,
-                     tenant: int = 0):
+    def publish_path(self, producer_node: int, broker_node: int,
+                     home_node: int, tenant: int = 0) -> list[PathElement]:
         c = self.cal
         if self.tenant_paths:
             els = [
@@ -400,8 +404,8 @@ class DirectStreaming(Architecture):
         els += self._broker_ingest(broker_node, home_node)
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node,
-                      tenant: int = 0):
+    def delivery_path(self, broker_node: int, home_node: int,
+                      consumer_node: int, tenant: int = 0) -> list[PathElement]:
         c = self.cal
         els = self._broker_egress(home_node, broker_node)
         if self.tenant_paths:
@@ -444,8 +448,10 @@ class ProxiedStreaming(Architecture):
         "moderate: proxies on pre-authorized gateway nodes (DTNs/DSNs); "
         "overcomes NAT/firewalls with centralized rules")
 
-    def __init__(self, inventory=None, cal=None, tunnel: str = "haproxy",
-                 num_conns: int = 1, session=None):
+    def __init__(self, inventory: Optional[ClusterInventory] = None,
+                 cal: Optional[Calibration] = None,
+                 tunnel: str = "haproxy", num_conns: int = 1,
+                 session: Optional["StreamingSession"] = None) -> None:
         if tunnel not in ("haproxy", "stunnel"):
             raise ValueError(f"unknown tunnel {tunnel!r}")
         self.tunnel = tunnel
@@ -487,10 +493,10 @@ class ProxiedStreaming(Architecture):
         svc = c.tunnel_msg_service_s * (1.0 + c.haproxy_flow_penalty * over)
         self._add(dataclasses.replace(self._specs["tunnel"], service_s=svc))
 
-    def producer_conn_limit(self):
+    def producer_conn_limit(self) -> Optional[int]:
         return self.cal.stunnel_conn_limit if self.tunnel == "stunnel" else None
 
-    def client_flush_s(self):
+    def client_flush_s(self) -> float:
         return self.cal.prs_client_flush_s
 
     def recv_latency_s(self, size: int) -> float:
@@ -501,8 +507,8 @@ class ProxiedStreaming(Architecture):
     def _tunnel_leg(self) -> list[PathElement]:
         return [self._tls(PathElement("tunnel"))]
 
-    def publish_path(self, producer_node, broker_node, home_node,
-                     tenant: int = 0):
+    def publish_path(self, producer_node: int, broker_node: int,
+                     home_node: int, tenant: int = 0) -> list[PathElement]:
         c = self.cal
         els = [
             # producer -> producer-side S2DS: plain AMQP inside facility
@@ -519,8 +525,8 @@ class ProxiedStreaming(Architecture):
         ]
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node,
-                      tenant: int = 0):
+    def delivery_path(self, broker_node: int, home_node: int,
+                      consumer_node: int, tenant: int = 0) -> list[PathElement]:
         # consumers are inside the facility: direct AMQP, no tunnel
         els = self._broker_egress(home_node, broker_node)
         els += [
@@ -529,8 +535,9 @@ class ProxiedStreaming(Architecture):
         ]
         return els
 
-    def reply_publish_path(self, consumer_node, broker_node, home_node,
-                           tenant: int = 0):
+    def reply_publish_path(self, consumer_node: int, broker_node: int,
+                           home_node: int, tenant: int = 0
+                           ) -> list[PathElement]:
         # consumer -> broker directly (plain AMQP inside the facility)
         els = [
             PathElement(f"clink_tx:{consumer_node}",
@@ -540,8 +547,9 @@ class ProxiedStreaming(Architecture):
         els += self._broker_ingest(broker_node, home_node)
         return els
 
-    def reply_delivery_path(self, home_node, broker_node, producer_node,
-                            tenant: int = 0):
+    def reply_delivery_path(self, home_node: int, broker_node: int,
+                            producer_node: int, tenant: int = 0
+                            ) -> list[PathElement]:
         """Replies back to external producers re-traverse the tunnel."""
         c = self.cal
         els = [
@@ -571,7 +579,9 @@ class ManagedServiceStreaming(Architecture):
         "highest: user needs only outbound 443; facility manages routing, "
         "DNS, TLS, provisioning (S3M API)")
 
-    def __init__(self, inventory=None, cal=None, managed_cluster=None):
+    def __init__(self, inventory: Optional[ClusterInventory] = None,
+                 cal: Optional[Calibration] = None,
+                 managed_cluster: Optional["ManagedCluster"] = None) -> None:
         self.managed_cluster = managed_cluster   # from s3m.provision_cluster
         super().__init__(inventory, cal)
 
@@ -596,8 +606,8 @@ class ManagedServiceStreaming(Architecture):
     def _worker(self, node: int) -> int:
         return node % self.cal.ingress_workers
 
-    def publish_path(self, producer_node, broker_node, home_node,
-                     tenant: int = 0):
+    def publish_path(self, producer_node: int, broker_node: int,
+                     home_node: int, tenant: int = 0) -> list[PathElement]:
         c = self.cal
         els = [
             self._tls(PathElement(f"plink:{producer_node}",
@@ -612,8 +622,8 @@ class ManagedServiceStreaming(Architecture):
         ]
         return els
 
-    def delivery_path(self, broker_node, home_node, consumer_node,
-                      tenant: int = 0):
+    def delivery_path(self, broker_node: int, home_node: int,
+                      consumer_node: int, tenant: int = 0) -> list[PathElement]:
         c = self.cal
         els = [
             PathElement(f"bcpu:{home_node}", latency_s=c.broker_deliver_cpu_s),
@@ -639,7 +649,7 @@ class ManagedServiceStreaming(Architecture):
 
 def make_architecture(name: str, inventory: Optional[ClusterInventory] = None,
                       cal: Optional[Calibration] = None,
-                      **kw) -> Architecture:
+                      **kw: Any) -> Architecture:
     """``name``: dts | prs-stunnel | prs-haproxy | prs-haproxy-c4 | mss."""
     if name == "dts":
         return DirectStreaming(inventory, cal)

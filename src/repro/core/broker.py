@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import OrderedDict, deque
-from typing import Callable, Iterable, Optional
+from typing import Iterable, Optional
 
 from repro.core.workloads import MIB
 
@@ -104,7 +104,7 @@ class ClassicQueue:
         home_node: int,
         max_bytes: int,
         overflow: str = OverflowPolicy.REJECT_PUBLISH,
-    ):
+    ) -> None:
         self.name = name
         self.home_node = home_node
         self.max_bytes = max_bytes
@@ -220,7 +220,7 @@ class BrokerCluster:
         ram_bytes_per_node: int = 32 * 1024 * MIB,
         data_fraction: float = 0.8,
         default_prefetch: int = 64,
-    ):
+    ) -> None:
         self.n_nodes = n_nodes
         self.ram_bytes_per_node = ram_bytes_per_node
         self.data_fraction = data_fraction

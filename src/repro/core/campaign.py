@@ -305,6 +305,8 @@ def run_campaign(spec: CampaignSpec, *, cache: Optional[Any] = None,
     ``None`` = one per CPU, capped by the group count).  Seeds within a
     group never fan out — they run stacked in one engine loop, which is
     where the batching win comes from."""
+    # streamlint: disable=SL403 -- wall_s is campaign telemetry (how long
+    # the run took), reported alongside results, never fed into them
     t0 = time.time()
     cells = spec.cells()
     for c in cells:
@@ -317,7 +319,7 @@ def run_campaign(spec: CampaignSpec, *, cache: Optional[Any] = None,
         by_group.setdefault(c.group_key(), []).append(i)
     fields = {f.name for f in dataclasses.fields(Summary)}
 
-    def rehydrate(h) -> Optional[Summary]:
+    def rehydrate(h: object) -> Optional[Summary]:
         # a cached dict from another Summary schema generation (field
         # added/removed/renamed) is a cache miss, not a crash or a
         # silently-defaulted mixture
@@ -372,5 +374,6 @@ def run_campaign(spec: CampaignSpec, *, cache: Optional[Any] = None,
         grouped.setdefault(c.group_key(), []).append(s)
     averaged = [average_summaries(ss) for ss in grouped.values()]
     return CampaignResult(spec=spec, cells=cells, summaries=ordered,
+                          # streamlint: disable=SL403 -- telemetry (see t0)
                           averaged=averaged, wall_s=time.time() - t0,
                           n_cached=n_cached)

@@ -44,11 +44,11 @@ and falls back to the vectorized engine per cell when JAX is missing.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.simulator import ENGINES
+from repro.core.simulator import ENGINES, ExperimentSpec
 from repro.core.vectorized import VectorizedStreamSim
 
 
@@ -61,7 +61,7 @@ def jax_available() -> bool:
     return True
 
 
-def jax_supported(spec) -> tuple[bool, str]:
+def jax_supported(spec: ExperimentSpec) -> tuple[bool, str]:
     """Can the JAX engine take this cell?  Returns ``(ok, reason)``.
 
     The engine inherits the full vectorized event loop, so every cell
@@ -79,8 +79,14 @@ def _pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
+#: jax arrays flow through the kernels, but jax is only imported
+#: lazily inside _kernels — Any keeps the annotations honest without
+#: a module-level jax dependency
+Array = Any
+
+
 @functools.lru_cache(maxsize=1)
-def _kernels():
+def _kernels() -> Any:
     """Build (once) the jitted kernel set.  Raises ImportError without
     JAX.  Every kernel is wrapped to run under a scoped x64 context."""
     import jax
@@ -88,16 +94,16 @@ def _kernels():
     from jax import lax
     from jax.experimental import enable_x64
 
-    def x64(fn):
+    def x64(fn: Callable[..., Any]) -> Callable[..., Any]:
         jfn = jax.jit(fn)
 
         @functools.wraps(fn)
-        def call(*args):
+        def call(*args: Any) -> Any:
             with enable_x64():
                 return jfn(*args)
         return call
 
-    def fifo1(a, h, carry):
+    def fifo1(a: Array, h: Array, carry: Array) -> Array:
         # e_j = max(a_j, e_{j-1}) + h_j in closed form (see _fifo_scan)
         a = jnp.maximum(a, carry)
         H = jnp.cumsum(h)
@@ -117,7 +123,8 @@ def _kernels():
                                                 out_axes=1)))
 
         @x64
-        def pop_until(t, used, thresh):
+        def pop_until(t: Array, used: Array,
+                      thresh: Array) -> tuple[Array, Array, Array]:
             """Masked depart-cursor advance: consume every recorded,
             unconsumed depart <= thresh.  Returns (n_popped, last_pop_t,
             used')."""
@@ -127,7 +134,8 @@ def _kernels():
                     used | ready)
 
         @x64
-        def pop_k(t, used, k):
+        def pop_k(t: Array, used: Array,
+                  k: Array) -> tuple[Array, Array, Array]:
             """Consume the k earliest unconsumed departs (the heap's
             pop-to-target).  Returns (n_popped, last_pop_t, used')."""
             masked = jnp.where(used, jnp.inf, t)
@@ -139,14 +147,16 @@ def _kernels():
                     used.at[order].set(used[order] | sel))
 
         @x64
-        def next_drain(t, used):
+        def next_drain(t: Array, used: Array) -> Array:
             """Masked segment-min: the earliest unconsumed depart
             (+inf when none is recorded)."""
             return jnp.min(jnp.where(used, jnp.inf, t))
 
         @x64
-        def admit_walk(t, valid, dep_sorted, dep0, n_enq0, caps,
-                       credits):
+        def admit_walk(t: Array, valid: Array, dep_sorted: Array,
+                       dep0: Array, n_enq0: Array, caps: Array,
+                       credits: Array
+                       ) -> tuple[Array, Array, Array, Array, Array]:
             """One lane's arrival-order admission walk as a lax.scan.
 
             ``t``: (M,) member clocks (sorted; +inf pads), ``valid``:
@@ -165,7 +175,8 @@ def _kernels():
                 lambda d: jnp.searchsorted(d, t, side="right"))(
                     dep_sorted)                      # (Q, M)
 
-            def step(adm, xs):
+            def step(adm: Array, xs: tuple[Array, Array]
+                     ) -> tuple[Array, tuple[Array, Array, Array, Array]]:
                 dci, ok = xs
                 backlog = n_enq0 + adm - dci         # (Q,) pre-admit
                 fullv = backlog >= caps
@@ -188,7 +199,8 @@ def _kernels():
             return admit, first_full, blocked, hwm, n_adm
 
         @x64
-        def rr_assign(t, assigned0, offs, ack_win, P):
+        def rr_assign(t: Array, assigned0: Array, offs: Array,
+                      ack_win: Array, P: Array) -> tuple[Array, Array]:
             """The pump fast path's round-robin split as one fused
             gather: message r goes to consumer r % k; its depart gates
             on the ack that freed its window slot, read from the
@@ -208,8 +220,9 @@ def _kernels():
             return j_all, jnp.maximum(t, jnp.where(m, g, -jnp.inf))
 
         @x64
-        def assign_chunk(tv, t0, valid, g0, assigned0, offs, ack_win,
-                         P):
+        def assign_chunk(tv: Array, t0: Array, valid: Array, g0: Array,
+                         assigned0: Array, offs: Array, ack_win: Array,
+                         P: Array) -> tuple[Array, ...]:
             """The pump slow path (the heap broker's per-message
             ``next_delivery`` in virtual time) as a lax.scan.
 
@@ -223,7 +236,10 @@ def _kernels():
             k = g0.shape[0]
             W = ack_win.shape[1]
 
-            def step(carry, xs):
+            def step(carry: tuple[Array, Array, Array, Array],
+                     xs: tuple[Array, Array, Array]
+                     ) -> tuple[tuple[Array, Array, Array, Array],
+                                tuple[Array, Array, Array, Array]]:
                 g, order, nass, stopped = carry
                 tvi, ti, ok = xs
                 go = g[order]                        # (k, L)
@@ -255,7 +271,7 @@ def _kernels():
     return K
 
 
-def _jax_fifo_scan(a, h, carry):
+def _jax_fifo_scan(a: np.ndarray, h: np.ndarray, carry: Any) -> np.ndarray:
     """Drop-in ``_fifo_scan`` port: pad the cohort axis to a power of
     two with inert ``+inf`` arrivals / zero holds, run the jitted scan
     (lane-vmapped when a lane axis is present), slice the pads off."""
@@ -298,7 +314,7 @@ class JaxStreamSim(VectorizedStreamSim):
 
     _scan_impl = staticmethod(_jax_fifo_scan)
 
-    def __init__(self, *args, **kwargs):
+    def __init__(self, *args: Any, **kwargs: Any) -> None:
         if not jax_available():
             raise ImportError(
                 "engine='jax' requires jax; install jax or use "
@@ -307,7 +323,8 @@ class JaxStreamSim(VectorizedStreamSim):
         super().__init__(*args, **kwargs)
 
     # -- masked depart store (replaces the per-lane heaps) -----------------
-    def _queue_state(self, qkey, consumers, size, *,
+    def _queue_state(self, qkey: tuple, consumers: list[int],
+                     size: int, *,
                      credit: Optional[int] = None,
                      cap_msgs: Optional[int] = None) -> dict:
         fresh = qkey not in self._queues

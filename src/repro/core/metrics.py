@@ -5,7 +5,7 @@ streaming *overhead* of PRS/MSS relative to the DTS baseline."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

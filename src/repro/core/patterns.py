@@ -18,7 +18,7 @@ is consumed both by benchmarks/ (paper figures) and tests/.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 from repro.core.architectures import Calibration
 from repro.core.ds2hpc import ClusterInventory
@@ -41,7 +41,7 @@ CONSUMER_SWEEP = (1, 2, 4, 8, 16, 32, 64)
 GATHER_REPLY_FACTOR = 1.0 / 256.0
 
 
-def _params(seed: int, **overrides) -> SimParams:
+def _params(seed: int, **overrides: Any) -> SimParams:
     # construct in one shot so SimParams.__post_init__ validates the
     # overrides (engine name, vec_round sub-multiple, positive knobs)
     return SimParams(seed=seed, **overrides)
@@ -68,7 +68,7 @@ def overflow_stress(arch: str, n_consumers: int, *,
                     queue_cap_msgs: Optional[int] = None,
                     n_runs: int = 1, seed: int = 0,
                     engine: Optional[str] = None,
-                    **param_overrides) -> list[RunResult]:
+                    **param_overrides: Any) -> list[RunResult]:
     """Run the overflow-regime stress cell (feedback pattern, equal
     producers/consumers, up to 1024 consumers on the vectorized engine).
 
@@ -171,7 +171,7 @@ def multi_tenant(arch: str = "mss",
                  engine: Optional[str] = None,
                  inventory: Optional[ClusterInventory] = None,
                  baseline_tenants: int = 1,
-                 **param_overrides) -> list[TenantPoint]:
+                 **param_overrides: Any) -> list[TenantPoint]:
     """Multi-tenant contention sweep: N independent feedback workflows
     (1 producer + 1 consumer each by default) share one deployment of
     ``arch``, as tenant count grows ``1 -> 64``.
@@ -348,7 +348,7 @@ def deployment_feasibility(archs: Sequence[str] = DEPLOYMENT_ARCHS,
                            engine: Optional[str] = None,
                            inventory: Optional[ClusterInventory] = None,
                            baseline_tenants: int = 1,
-                           **param_overrides) -> FeasibilityStudy:
+                           **param_overrides: Any) -> FeasibilityStudy:
     """The paper's §6 deployment-feasibility argument, quantified: the
     same 1 -> N tenant sweep across all three architecture deployment
     models (per-tenant DTS tunnels vs PRS shared-proxy ingress vs the
@@ -388,7 +388,7 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
                 engine: Optional[str] = None,
                 inventory: Optional[ClusterInventory] = None,
                 cal: Optional[Calibration] = None,
-                **param_overrides) -> list[RunResult]:
+                **param_overrides: Any) -> list[RunResult]:
     """Run one (pattern, architecture, workload, consumer-count) cell.
 
     The paper averages three runs per data point; we run ``n_runs`` seeds.
@@ -428,7 +428,7 @@ def sweep(pattern: str, archs: Sequence[str], workload: str,
           engine: Optional[str] = None,
           inventory: Optional[ClusterInventory] = None,
           cal: Optional[Calibration] = None,
-          **param_overrides) -> list[Summary]:
+          **param_overrides: Any) -> list[Summary]:
     """Full paper-style sweep; returns averaged summaries per cell."""
     out: list[Summary] = []
     for arch in archs:

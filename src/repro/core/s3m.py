@@ -107,7 +107,8 @@ class ManagedCluster:
 class S3MService:
     """The facility side: Istio-style policy checks + provisioning."""
 
-    def __init__(self, n_dsn: int = 3, clock: Optional[Callable[[], float]] = None):
+    def __init__(self, n_dsn: int = 3,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         self.n_dsn = n_dsn
         self._clock = clock or (lambda: 0.0)
         self._tokens: dict[str, Token] = {}

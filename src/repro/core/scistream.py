@@ -82,7 +82,8 @@ class S2DS:
 class S2CS:
     """Control server on one gateway node: port allocation + S2DS launch."""
 
-    def __init__(self, gateway_ip: str, cert: Optional[ProxyCertificate] = None):
+    def __init__(self, gateway_ip: str,
+                 cert: Optional[ProxyCertificate] = None) -> None:
         self.gateway_ip = gateway_ip
         self.cert = cert or ProxyCertificate.self_signed(gateway_ip)
         self._allocated: set[int] = set()
@@ -145,7 +146,7 @@ class StreamingSession:
 class S2UC:
     """User client: runs the inbound/outbound request sequence of §4.4."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._pending: dict[str, dict] = {}
         self.sessions: dict[str, StreamingSession] = {}
 

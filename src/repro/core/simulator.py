@@ -55,7 +55,7 @@ CONSUMER_PROC_S = {name: w.proc_time_s() for name, w in WORKLOADS.items()}
 
 #: registered engine names -> constructor, filled at the bottom of this
 #: module (heap) and by repro.core.vectorized on import (vectorized).
-ENGINES: dict = {}
+ENGINES: dict[str, type["Engine"]] = {}
 
 
 @dataclasses.dataclass
@@ -222,7 +222,7 @@ class Engine(Protocol):
 
     def __init__(self, spec: ExperimentSpec,
                  inventory: Optional[ClusterInventory] = None,
-                 arch: Optional[Architecture] = None): ...
+                 arch: Optional[Architecture] = None) -> None: ...
 
     def run(self) -> RunResult: ...
 
@@ -256,7 +256,7 @@ def check_feasibility(arch: Architecture, spec: ExperimentSpec) -> None:
 class _Resource:
     __slots__ = ("spec", "_free_pipe", "_free_pool")
 
-    def __init__(self, spec: ResourceSpec):
+    def __init__(self, spec: ResourceSpec) -> None:
         self.spec = spec
         self._free_pipe = 0.0
         self._free_pool: list[float] = [0.0] * max(1, spec.servers)
@@ -292,7 +292,7 @@ class StreamSim:
 
     def __init__(self, spec: ExperimentSpec,
                  inventory: Optional[ClusterInventory] = None,
-                 arch: Optional[Architecture] = None):
+                 arch: Optional[Architecture] = None) -> None:
         self.spec = spec
         self.p = spec.params
         self.inv = inventory or ClusterInventory()
@@ -685,7 +685,7 @@ class StreamSim:
 ENGINES["heap"] = StreamSim
 
 
-def get_engine(name: str):
+def get_engine(name: str) -> type["Engine"]:
     """Resolve an engine name to its class, importing lazily."""
     if name not in ENGINES and name == "vectorized":
         import repro.core.vectorized  # noqa: F401  (registers itself)

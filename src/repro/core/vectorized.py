@@ -91,7 +91,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, Optional
+from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -118,7 +118,8 @@ SATURATION_MAX_CLIENTS = 64
 # ---------------------------------------------------------------------------
 
 
-def _fifo_scan(a: np.ndarray, h: np.ndarray, carry) -> np.ndarray:
+def _fifo_scan(a: np.ndarray, h: np.ndarray,
+               carry: float | np.ndarray) -> np.ndarray:
     """End times for FIFO service: e_j = max(a_j, e_{j-1}) + h_j, with the
     server busy until ``carry`` before the first arrival.
 
@@ -145,7 +146,8 @@ class _VecResource:
 
     __slots__ = ("spec", "_free_pipe", "_free_pool", "_scan")
 
-    def __init__(self, spec: ResourceSpec, lanes: int = 1, scan=None):
+    def __init__(self, spec: ResourceSpec, lanes: int = 1,
+                 scan: Optional[Callable] = None) -> None:
         self.spec = spec
         #: the FIFO-scan kernel (``_fifo_scan`` or an engine-injected
         #: port of it, e.g. the JAX engine's jitted scan)
@@ -251,7 +253,7 @@ class VectorizedStreamSim:
     def __init__(self, spec: ExperimentSpec,
                  inventory: Optional[ClusterInventory] = None,
                  arch: Optional[Architecture] = None,
-                 stack_seeds: Optional[list] = None):
+                 stack_seeds: Optional[list[int]] = None) -> None:
         """``stack_seeds``: run this many seed-lanes of the same cell in
         one batched event loop (cohort stacking — see
         :meth:`run_stacked`); ``None``/single-seed is the exact solo
@@ -331,7 +333,8 @@ class VectorizedStreamSim:
                     self._slack *= 0.25
 
     # -- work-pattern topology (shared vs per-tenant vhost queues) -------------
-    def _work_topology(self):
+    def _work_topology(self) -> tuple[int, list[list[int]],
+                                      list[list[int]], list[int]]:
         """Queue topology of the work-sharing/feedback patterns.
 
         Returns ``(nq, q_consumers, prod_queues, q_publishers)``:
@@ -553,7 +556,7 @@ class VectorizedStreamSim:
                 a[:ch[f].shape[0]] = ch[f]
                 ch[f] = a
 
-    def _resolve_paths(self, flow: str, combos: np.ndarray):
+    def _resolve_paths(self, flow: str, combos: np.ndarray) -> tuple:
         """Per-combo aligned paths + member indices for one cohort leg.
 
         The full resolution is a pure function of ``(flow, combos)``, so
@@ -584,7 +587,8 @@ class VectorizedStreamSim:
         return aligned, idx_by, n_slots
 
     # -- queue backlog accounting (credit flow + overflow) ---------------------
-    def _queue_state(self, qkey, consumers, size: int, *,
+    def _queue_state(self, qkey: tuple, consumers: list[int],
+                     size: int, *,
                      credit: Optional[int] = None,
                      cap_msgs: Optional[int] = None) -> dict:
         """Get/create one broker queue's batched state.
@@ -1047,7 +1051,8 @@ class VectorizedStreamSim:
                 return
 
     # -- prefetch-windowed delivery (the batched broker pump) ------------------
-    def _deliver_queue(self, qkey, consumers, t_ready: np.ndarray,
+    def _deliver_queue(self, qkey: tuple, consumers: list[int],
+                       t_ready: np.ndarray,
                        member_idx: np.ndarray, combos_fn: Callable,
                        size: int, flow: str, consumer: bool, recv: float,
                        on_seen: Callable) -> None:
@@ -1099,7 +1104,7 @@ class VectorizedStreamSim:
             ch["assigned"] += pos.size
         return cons, j_all, depart
 
-    def _pump_queues(self, qkeys) -> None:
+    def _pump_queues(self, qkeys: Iterable[tuple]) -> None:
         """Release every window-admissible pending delivery on the given
         queues and push the released groups as transit batches."""
         P = max(1, self.p.prefetch)
@@ -1407,7 +1412,9 @@ class VectorizedStreamSim:
                         # clocks when the resolver fires
                         any_deferred = blk[0]
 
-                        def resolver(t_res, mk=mk, tc=tc, blk=blk):
+                        def resolver(t_res: float, mk: Any = mk,
+                                     tc: Any = tc,
+                                     blk: Any = blk) -> None:
                             tv = tc.copy()
                             tv[0] = t_res
                             for lane in range(1, L):
@@ -1453,7 +1460,6 @@ class VectorizedStreamSim:
         per_producer = spec.total_messages // nP
         size = spec.workload.payload_bytes
         flush = self.arch.client_flush_s()
-        ctrl = self.arch.control_latency_s()
         W = max(2, min(p.confirm_window, p.window_bytes // size))
 
         # declare order matches the heap engine: work queues first (homes
@@ -1519,7 +1525,8 @@ class VectorizedStreamSim:
         prefix = np.zeros(nP, dtype=np.int64)
         state = {"next_launch": 0}
 
-        def mark_confirmed(pr_arr, i_arr) -> None:
+        def mark_confirmed(pr_arr: np.ndarray,
+                           i_arr: np.ndarray) -> None:
             conf_ok[pr_arr, i_arr] = True
             for pr in np.unique(pr_arr):
                 j = int(prefix[pr])
@@ -1555,7 +1562,8 @@ class VectorizedStreamSim:
                                     cons // cpt))
                            for qi in range(nq)}
 
-        def on_seen_del(mem, t_done, cons):
+        def on_seen_del(mem: np.ndarray, t_done: np.ndarray,
+                        cons: np.ndarray) -> None:
             consume_t[mem] = t_done
             if feedback:
                 launch_reply(mem, t_done, cons)
@@ -1579,7 +1587,7 @@ class VectorizedStreamSim:
                               q_home[flat_q[mem]]], axis=1),
                     flat_pr[mem] // ppt)
 
-            def groups_of(mem: np.ndarray):
+            def groups_of(mem: np.ndarray) -> Iterator[tuple]:
                 qs = flat_q[mem]
                 for qi in np.unique(qs):
                     yield (int(qi), [work_q[int(qi)]],
@@ -1606,7 +1614,8 @@ class VectorizedStreamSim:
                 groups_of=groups_of, deliver=deliver,
                 set_confirms=set_conf, mark_confirmed=mark)
 
-        def launch_reply(members, t_done, cons) -> None:
+        def launch_reply(members: np.ndarray, t_done: np.ndarray,
+                         cons: np.ndarray) -> None:
             # members are global message indices; producer = index // n
             mem_arr, cns_arr = members, cons
 
@@ -1618,7 +1627,7 @@ class VectorizedStreamSim:
                              axis=1),
                     cns_arr[pos] // cpt)
 
-            def groups_of(pos: np.ndarray):
+            def groups_of(pos: np.ndarray) -> Iterator[tuple]:
                 prs = mem_arr[pos] // per_producer
                 for pr in np.unique(prs):
                     yield (int(pr), [self._queues[("reply", int(pr))]],
@@ -1626,13 +1635,15 @@ class VectorizedStreamSim:
 
             def deliver(pr: int, pos_sel: np.ndarray,
                         t_renq: np.ndarray) -> None:
-                def combos_fn(sub_mem, _cons, pr=pr):
+                def combos_fn(sub_mem: np.ndarray, _cons: np.ndarray,
+                              pr: int = pr) -> np.ndarray:
                     row = [reply_home[pr], pr_bnode[pr], pr_node[pr]]
                     if tcols:
                         row.append(pr // ppt)
                     return np.broadcast_to(row, (sub_mem.size, len(row)))
 
-                def on_seen(sub_mem, t_seen, _cons):
+                def on_seen(sub_mem: np.ndarray, t_seen: np.ndarray,
+                            _cons: np.ndarray) -> None:
                     flat_pub = pub_start.reshape(
                         (nP * per_producer,) + lanes)
                     rtts[sub_mem] = t_seen - flat_pub[sub_mem]
@@ -1660,7 +1671,6 @@ class VectorizedStreamSim:
         per_producer = spec.total_messages  # // nP with nP == 1
         size = spec.workload.payload_bytes
         flush = self.arch.client_flush_s()
-        ctrl = self.arch.control_latency_s()
         W = max(2, min(p.confirm_window, p.window_bytes // size))
 
         bq_home = np.arange(nC) % inv.n_dsn        # bq:c declared in order
@@ -1700,7 +1710,7 @@ class VectorizedStreamSim:
         conf_ok = np.zeros(per_producer, dtype=bool)
         state = {"next_launch": 0, "prefix": 0}
 
-        def mark_confirmed(i_arr) -> None:
+        def mark_confirmed(i_arr: np.ndarray) -> None:
             conf_ok[i_arr] = True
             j = state["prefix"]
             while j < per_producer and conf_ok[j]:
@@ -1730,7 +1740,7 @@ class VectorizedStreamSim:
                 # a fanout publish transits once, to the exchange's home
                 return np.broadcast_to([pnode, pbnode, 0], (mem.size, 3))
 
-            def groups_of(mem: np.ndarray):
+            def groups_of(mem: np.ndarray) -> Iterator[tuple]:
                 # one admission group: reject-publish and credit flow are
                 # atomic across every fanout target (heap broker)
                 yield None, bqs, np.arange(mem.size)
@@ -1741,7 +1751,8 @@ class VectorizedStreamSim:
             def mark(mem: np.ndarray) -> None:
                 mark_confirmed(i_blk[mem])
 
-            def deliver(_g, mem: np.ndarray, t_enq: np.ndarray) -> None:
+            def deliver(_g: object, mem: np.ndarray,
+                        t_enq: np.ndarray) -> None:
                 launch_del(i_blk[mem], t_enq)
 
             self._publish_with_retry(
@@ -1750,17 +1761,19 @@ class VectorizedStreamSim:
                 deliver=deliver, set_confirms=set_conf,
                 mark_confirmed=mark)
 
-        def launch_del(i_part, t_enq) -> None:
+        def launch_del(i_part: np.ndarray, t_enq: np.ndarray) -> None:
             # replicate to every per-consumer queue; deliver each copy
             for c in range(nC):
                 gidx_c = c * per_producer + i_part
 
-                def combos_fn(members, cons, c=c):
+                def combos_fn(members: np.ndarray, cons: np.ndarray,
+                              c: int = c) -> np.ndarray:
                     return np.broadcast_to(
                         [c_bnode[c], bq_home[c], c_node[c]],
                         (members.size, 3))
 
-                def on_seen(members, t_done, cons, c=c):
+                def on_seen(members: np.ndarray, t_done: np.ndarray,
+                            cons: np.ndarray, c: int = c) -> None:
                     consume_t[members] = t_done
                     if gather:
                         launch_reply(members, t_done, c)
@@ -1770,7 +1783,8 @@ class VectorizedStreamSim:
                     "delivery_path", consumer=True, recv=recv_req,
                     on_seen=on_seen)
 
-        def launch_reply(members, t_done, c) -> None:
+        def launch_reply(members: np.ndarray, t_done: np.ndarray,
+                         c: int) -> None:
             # members are global copy indices (c * per_producer + i)
             mem_arr = members
 
@@ -1778,17 +1792,19 @@ class VectorizedStreamSim:
                 return np.broadcast_to(
                     [c_node[c], c_bnode[c], gather_home], (pos.size, 3))
 
-            def groups_of(pos: np.ndarray):
+            def groups_of(pos: np.ndarray) -> Iterator[tuple]:
                 yield None, [self._queues[("gather",)]], np.arange(pos.size)
 
-            def deliver(_g, pos_sel: np.ndarray,
+            def deliver(_g: object, pos_sel: np.ndarray,
                         t_renq: np.ndarray) -> None:
-                def combos_fn(sub_members, _cons):
+                def combos_fn(sub_members: np.ndarray,
+                              _cons: np.ndarray) -> np.ndarray:
                     return np.broadcast_to(
                         [gather_home, pbnode, pnode],
                         (sub_members.size, 3))
 
-                def on_seen(sub_members, t_seen, _cons):
+                def on_seen(sub_members: np.ndarray, t_seen: np.ndarray,
+                            _cons: np.ndarray) -> None:
                     rtts[sub_members] = (
                         t_seen - pub_start[sub_members % per_producer])
 
@@ -1900,7 +1916,7 @@ ENGINES["vectorized"] = VectorizedStreamSim
 # ---------------------------------------------------------------------------
 
 
-def _stack_key(spec: ExperimentSpec):
+def _stack_key(spec: ExperimentSpec) -> tuple:
     """Cells that differ only in ``params.seed`` stack into one run."""
     import dataclasses
     return (spec.pattern, spec.arch, spec.workload, spec.n_producers,
@@ -1915,7 +1931,9 @@ def _stack_key(spec: ExperimentSpec):
 STACK_MAX_LANES = 16
 
 
-def run_many(specs, inventory=None) -> list:
+def run_many(specs: Sequence[ExperimentSpec],
+             inventory: Optional[ClusterInventory] = None
+             ) -> list[RunResult]:
     """Run several experiments, stacking structurally-identical cells.
 
     The campaign layer's batched entry point: cells that differ only in

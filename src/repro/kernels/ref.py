@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as _L
-from repro.models import mamba2 as _m2
 
 
 def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=0,

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.launch.steps import build_serve_step
 from repro.models.sharding import ModelContext
 from repro.models.zoo import build_model

@@ -14,7 +14,6 @@ serve_step: one decode step against the sharded cache; prefill_step: full
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -20,7 +20,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import (
     AsyncCheckpointer, latest_checkpoint, restore_checkpoint)

@@ -19,7 +19,6 @@ Weights layout (stacked per layer by the caller):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -41,7 +40,6 @@ def router_probs(x: jax.Array, w_router: jax.Array, k: int):
 
 def load_balancing_loss(probs: jax.Array, idx: jax.Array, n_experts: int):
     """Switch-transformer aux loss: E * sum_e f_e * p_e."""
-    T = probs.shape[0]
     counts = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
     f = counts / jnp.maximum(idx.size, 1)
     p = probs.mean(axis=0)

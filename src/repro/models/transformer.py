@@ -19,7 +19,6 @@ Structure choices made for compile-scale (40 dry-run cells x 512 devices):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -8,7 +8,7 @@ rules (including the ZeRO-style opt-state rules) apply transparently.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Union
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp

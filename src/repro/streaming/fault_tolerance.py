@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 from repro.streaming.ingest import StreamingDataLoader
 

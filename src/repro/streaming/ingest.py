@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Optional
 
 import numpy as np
 

@@ -1,10 +1,9 @@
 """Broker semantics: the RabbitMQ behaviors the paper's evaluation relies
 on (§4.2/§5.2)."""
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.broker import BrokerCluster, Message, OverflowPolicy
+from repro.core.broker import BrokerCluster, Message
 
 
 def mk(n_nodes=3, prefetch=4):

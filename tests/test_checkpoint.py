@@ -1,9 +1,7 @@
 """Checkpointing: atomic roundtrip, retention, corruption tolerance,
 async writer, and train-resume determinism."""
 
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

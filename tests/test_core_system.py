@@ -10,7 +10,7 @@ from repro.core.ds2hpc import (
 from repro.core.s3m import (
     ResourceSettings, S3MAuthError, S3MError, S3MService)
 from repro.core.workloads import (
-    DSTREAM, GENERIC, LSTREAM, get_workload, tokens_from_payload)
+    DSTREAM, GENERIC, LSTREAM, tokens_from_payload)
 
 
 # --------------------------- Table 1 -----------------------------------------

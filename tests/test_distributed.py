@@ -9,7 +9,6 @@ Covered:
   * a miniature multi-pod (2,2,2) dry-run lowers AND compiles
 """
 
-import json
 import os
 import subprocess
 import sys

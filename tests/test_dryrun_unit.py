@@ -1,12 +1,11 @@
 """Dry-run machinery units: HLO collective parsing, model-FLOPs math,
 analytic memory floor, shape assignments, sharding-rule fallbacks."""
 
-import jax
 import pytest
 
 import repro.launch.dryrun as dr
 from repro.configs import get_config
-from repro.configs.shapes import LONG_CAPABLE, SHAPES, shapes_for
+from repro.configs.shapes import LONG_CAPABLE, shapes_for
 from repro.launch.mesh import make_local_mesh
 from repro.launch.shardings import make_rules, zero_rules
 

@@ -2,13 +2,12 @@
 message counts, feasibility gates, conservation."""
 
 import numpy as np
-import pytest
 
 from repro.core.metrics import rtt_cdf, summarize, throughput_msgs_per_s
 from repro.core.patterns import run_pattern
 from repro.core.simulator import (
-    ExperimentSpec, SimParams, StreamSim, run_experiment)
-from repro.core.workloads import DSTREAM, get_workload
+    ExperimentSpec, SimParams, StreamSim)
+from repro.core.workloads import get_workload
 
 MSGS = 1500
 

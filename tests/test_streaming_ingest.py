@@ -4,8 +4,6 @@ backpressure, and the steering feedback loop."""
 
 import time
 
-import numpy as np
-import pytest
 
 from repro.core.workloads import DSTREAM, tokens_from_payload
 from repro.streaming import (

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CONSUMER_SWEEP, ResourceSettings, S3MService, establish_prs_session,
+    ResourceSettings, S3MService, establish_prs_session,
     make_architecture, run_pattern, summarize)
 from repro.core.metrics import overhead_table
 from repro.core.workloads import DSTREAM

@@ -40,7 +40,7 @@ def test_streamed_training_with_crash_and_feedback():
 
 
 def test_checkpoint_restart_continues(tmp_path):
-    out1 = train_run(_args(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5))
+    train_run(_args(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5))
     out2 = train_run(_args(steps=14, ckpt_dir=str(tmp_path), ckpt_every=5))
     # resumed run starts from step 10 and produces only 4 more losses
     assert len(out2["losses"]) == 4

@@ -1,0 +1,1 @@
+"""Repo tooling: the streamlint static analyzer and CI helpers."""

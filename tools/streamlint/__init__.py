@@ -1,0 +1,42 @@
+"""streamlint — AST-level engine-contract analysis for this repo.
+
+The repo's correctness story — three ``Engine`` backends held to
+documented parity bands, a resumable campaign cache keyed by
+``SimParams`` fingerprints, pilot bit-identity across stacked seed
+lanes — is enforced empirically by the parity suites.  Every one of
+those contracts is *also* a structural property of the source, and this
+package checks them statically, before a single cell runs:
+
+========  ==========================================================
+family    invariant
+========  ==========================================================
+SL0xx     suppression hygiene (justifications, unused suppressions)
+SL1xx     engine-contract symmetry: every ``RunResult`` field the
+          heap engine populates is populated by the vectorized
+          engine and handled by the jax engine
+SL2xx     cache-key completeness: every ``SimParams`` /
+          ``ExperimentSpec`` / ``CellSpec`` field flows into
+          ``params_fingerprint`` / ``cell_key``
+SL3xx     jit/x64 purity: no global ``jax_enable_x64`` flips, no
+          host syncs or data-dependent Python branches inside the
+          jitted kernel seams
+SL4xx     determinism: no ``random.*``, unseeded RNGs, wall-clock
+          reads, or unordered-set iteration in engine paths
+SL5xx     doc/test tolerance drift: the ``docs/engines.md`` parity
+          table matches ``repro.core.parity`` band constants, and
+          the parity suites import them
+========  ==========================================================
+
+Run ``python -m tools.streamlint src benchmarks`` from the repo root;
+suppress a finding in place with ``# streamlint: disable=SL403 -- why``
+(the justification is mandatory — SL001 fires on bare suppressions).
+See ``docs/static_analysis.md`` for the rule catalog.
+
+Stdlib-only by design (``ast`` + ``tokenize``): no new runtime deps.
+"""
+
+from tools.streamlint.engine import (  # noqa: F401
+    Analysis, Config, Diagnostic, Project, SourceFile, run_analysis)
+
+__all__ = ["Analysis", "Config", "Diagnostic", "Project", "SourceFile",
+           "run_analysis"]

@@ -1,0 +1,8 @@
+"""``python -m tools.streamlint [paths...] [--json report.json]``."""
+
+import sys
+
+from tools.streamlint.engine import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""Rule modules register themselves with the engine on import."""
+
+from tools.streamlint.rules import (  # noqa: F401
+    cache_key, determinism, doc_drift, engine_contract, jax_purity)

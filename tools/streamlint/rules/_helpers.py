@@ -1,0 +1,110 @@
+"""Shared AST plumbing for the rule modules."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def find_class(tree: ast.Module, name: str) -> ast.ClassDef | None:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def find_func(tree: ast.AST, name: str) -> ast.FunctionDef | None:
+    """First (module- or class-level) def with the given name."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def dataclass_fields(cls: ast.ClassDef) -> dict[str, int]:
+    """Dataclass field name -> lineno (AnnAssign class-level targets,
+    minus ClassVar annotations — matching dataclasses' own semantics)."""
+    fields: dict[str, int] = {}
+    for node in cls.body:
+        if not isinstance(node, ast.AnnAssign):
+            continue
+        if not isinstance(node.target, ast.Name):
+            continue
+        ann = dotted(node.annotation) or ""
+        if isinstance(node.annotation, ast.Subscript):
+            ann = dotted(node.annotation.value) or ""
+        if ann.split(".")[-1] == "ClassVar":
+            continue
+        fields[node.target.id] = node.lineno
+    return fields
+
+
+def calls_to(tree: ast.AST, name: str) -> Iterator[ast.Call]:
+    """Every ``name(...)`` call (bare name or trailing attribute)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d is not None and d.split(".")[-1] == name:
+                yield node
+
+
+def kwarg_names(call: ast.Call) -> set[str]:
+    return {kw.arg for kw in call.keywords if kw.arg is not None}
+
+
+def attr_reads(tree: ast.AST, base: str) -> set[str]:
+    """Attribute names read off a given base name (``base.<attr>``)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == base:
+            out.add(node.attr)
+    return out
+
+
+def engine_registrations(tree: ast.Module) -> dict[str, str]:
+    """``ENGINES["heap"] = StreamSim``-style registrations found in a
+    module: engine name -> class name."""
+    regs: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "ENGINES" \
+                    and isinstance(tgt.slice, ast.Constant) \
+                    and isinstance(tgt.slice.value, str) \
+                    and isinstance(node.value, ast.Name):
+                regs[tgt.slice.value] = node.value.id
+    return regs
+
+
+def enclosing_class(tree: ast.Module,
+                    node: ast.AST) -> ast.ClassDef | None:
+    """The top-level ClassDef whose subtree contains ``node``."""
+    for top in tree.body:
+        if isinstance(top, ast.ClassDef):
+            for sub in ast.walk(top):
+                if sub is node:
+                    return top
+    return None
+
+
+def const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

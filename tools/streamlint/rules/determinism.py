@@ -1,0 +1,135 @@
+"""SL4xx — determinism in the engine paths.
+
+Pilot bit-identity (stacked lane 0 must reproduce the solo vectorized
+run exactly) and campaign cache reuse both assume the engines are pure
+functions of ``(spec, seed)``.  Within the configured determinism
+scope (``src/repro/core/`` by default) these rules forbid every
+ambient-entropy source:
+
+* SL401 — the stdlib ``random`` module (process-global Mersenne state).
+* SL402 — unseeded ``np.random.default_rng()`` or legacy global-state
+  ``np.random.*`` calls.
+* SL403 — wall-clock reads (``time.time``/``monotonic``/
+  ``perf_counter``, ``datetime.now``, …).
+* SL404 — direct iteration over an unordered ``set``/``frozenset``
+  (hash-order dependent; wrap in ``sorted(...)``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from tools.streamlint.engine import (Diagnostic, Project, SourceFile,
+                                     rule)
+from tools.streamlint.rules._helpers import dotted
+
+_LEGACY_NP_RANDOM = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "shuffle", "permutation", "uniform", "normal", "choice", "bytes",
+}
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+_WALL_CLOCK_SUFFIXES = (
+    "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+)
+
+
+def _in_scope(project: Project,
+              scanned: list[SourceFile]) -> Iterator[SourceFile]:
+    for sf in scanned:
+        if any(sf.path.startswith(p)
+               for p in project.config.determinism_scope):
+            yield sf
+
+
+@rule("SL401", "no stdlib random in engine paths")
+def sl401(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    for sf in _in_scope(project, scanned):
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names
+                         if a.name == "random"]
+            elif isinstance(node, ast.ImportFrom):
+                names = ["random"] if node.module == "random" else []
+            else:
+                continue
+            if names:
+                yield Diagnostic(
+                    rule="SL401", file=sf.path, line=node.lineno,
+                    message=("stdlib random is process-global state; "
+                             "use a seeded np.random.default_rng"))
+
+
+@rule("SL402", "numpy RNGs in engine paths must be explicitly seeded")
+def sl402(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    for sf in _in_scope(project, scanned):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            parts = d.split(".")
+            if parts[-1] == "default_rng" and not node.args \
+                    and not node.keywords:
+                yield Diagnostic(
+                    rule="SL402", file=sf.path, line=node.lineno,
+                    message=("unseeded default_rng(); pass a seed "
+                             "derived from the spec"))
+            elif len(parts) >= 2 and parts[-2] == "random" \
+                    and parts[0] in ("np", "numpy") \
+                    and parts[-1] in _LEGACY_NP_RANDOM:
+                yield Diagnostic(
+                    rule="SL402", file=sf.path, line=node.lineno,
+                    message=(f"{d}() uses numpy's global RNG state; "
+                             f"use a seeded Generator"))
+
+
+@rule("SL403", "no wall-clock reads in engine paths")
+def sl403(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    for sf in _in_scope(project, scanned):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            if d in _WALL_CLOCK or d.endswith(_WALL_CLOCK_SUFFIXES):
+                yield Diagnostic(
+                    rule="SL403", file=sf.path, line=node.lineno,
+                    message=(f"{d}() reads the wall clock; engine "
+                             f"results must be pure in (spec, seed)"))
+
+
+def _iter_sources(tree: ast.AST) -> Iterator[tuple[ast.AST, int]]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter, node.lineno
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter, node.lineno
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        d = dotted(node.func) or ""
+        return d in ("set", "frozenset")
+    return False
+
+
+@rule("SL404", "no iteration over unordered sets in engine paths")
+def sl404(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    for sf in _in_scope(project, scanned):
+        for it, lineno in _iter_sources(sf.tree):
+            if _is_set_expr(it):
+                yield Diagnostic(
+                    rule="SL404", file=sf.path, line=lineno,
+                    message=("iterating an unordered set; hash order "
+                             "leaks into results — wrap in sorted()"))

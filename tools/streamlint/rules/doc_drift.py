@@ -1,0 +1,161 @@
+"""SL5xx — doc/test tolerance drift.
+
+The parity bands live once, in ``repro.core.parity``; the suites
+import them and every row of the ``docs/engines.md`` parity table
+carries a ``band:<key>`` id.  These rules close the loop in both
+directions:
+
+* SL501 — a ``band:<key>`` in the docs that names an unknown band, or
+  whose documented bound (``≤ N%`` / ``lo–hi×``) disagrees with the
+  constant the tests enforce.
+* SL502 — a band constant no docs row documents.
+* SL503 — a parity test file that does not import the shared band
+  constants (literal drift would be invisible to SL501).
+
+The constants are read from the ``PARITY_BANDS`` / ``FACTOR_BANDS``
+dict literals by AST (``ast.literal_eval``), not by importing the
+module — the analyzer must work on fixture trees that are not
+importable packages.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable
+
+from tools.streamlint.engine import (Diagnostic, Project, SourceFile,
+                                     rule)
+
+_BAND_ID_RE = re.compile(r"band:([a-z0-9_.\-]+)")
+#: "≤ 3%", "<= 3.5 %"
+_PCT_RE = re.compile(r"(?:≤|<=)\s*([0-9.]+)\s*%")
+#: "0.3–3×", "0.5-2.0 x"
+_FACTOR_RE = re.compile(r"([0-9.]+)\s*[–-]\s*([0-9.]+)\s*[×x]")
+
+
+def _literal_dict(tree: ast.Module, name: str) -> tuple[dict, int] | None:
+    """(literal value, lineno) of a module-level ``name = {...}``."""
+    for node in tree.body:
+        target: ast.expr | None = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target = node.targets[0]
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            target = node.target
+        else:
+            continue
+        if isinstance(target, ast.Name) and target.id == name:
+            try:
+                value = ast.literal_eval(node.value)
+            except ValueError:
+                return None
+            if isinstance(value, dict):
+                return value, node.lineno
+    return None
+
+
+def _bands(project: Project) -> tuple[dict, dict, SourceFile] | None:
+    sf = project.file(project.config.parity_constants)
+    if sf is None:
+        return None
+    parity = _literal_dict(sf.tree, "PARITY_BANDS")
+    factor = _literal_dict(sf.tree, "FACTOR_BANDS")
+    if parity is None or factor is None:
+        return None
+    return parity[0], factor[0], sf
+
+
+@rule("SL501", "docs parity table must match the enforced band "
+               "constants")
+def sl501(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    bands = _bands(project)
+    doc = project.text(project.config.engines_doc)
+    if bands is None or doc is None:
+        return
+    parity, factor, _ = bands
+    doc_path = project.config.engines_doc
+    for lineno, line in enumerate(doc.splitlines(), start=1):
+        ids = _BAND_ID_RE.findall(line)
+        if not ids:
+            continue
+        pcts = [float(m) for m in _PCT_RE.findall(line)]
+        factors = [(float(lo), float(hi))
+                   for lo, hi in _FACTOR_RE.findall(line)]
+        for key in ids:
+            if key in parity:
+                want = parity[key] * 100.0
+                if not any(abs(p - want) < 1e-9 for p in pcts):
+                    got = ", ".join(f"{p:g}%" for p in pcts) or "none"
+                    yield Diagnostic(
+                        rule="SL501", file=doc_path, line=lineno,
+                        message=(f"band:{key} documents {got} but the "
+                                 f"tests enforce ≤ {want:g}%"))
+            elif key in factor:
+                want_f = tuple(factor[key])
+                if not any(abs(lo - want_f[0]) < 1e-9
+                           and abs(hi - want_f[1]) < 1e-9
+                           for lo, hi in factors):
+                    got = ", ".join(f"{lo:g}–{hi:g}×"
+                                    for lo, hi in factors) or "none"
+                    yield Diagnostic(
+                        rule="SL501", file=doc_path, line=lineno,
+                        message=(f"band:{key} documents {got} but the "
+                                 f"tests enforce "
+                                 f"{want_f[0]:g}–{want_f[1]:g}×"))
+            else:
+                yield Diagnostic(
+                    rule="SL501", file=doc_path, line=lineno,
+                    message=(f"band:{key} is not a known parity band; "
+                             f"known keys live in "
+                             f"{project.config.parity_constants}"))
+
+
+@rule("SL502", "every enforced band constant must be documented in "
+               "the docs parity table")
+def sl502(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    bands = _bands(project)
+    doc = project.text(project.config.engines_doc)
+    if bands is None or doc is None:
+        return
+    parity, factor, sf = bands
+    documented = set(_BAND_ID_RE.findall(doc))
+    for name, table in (("PARITY_BANDS", parity),
+                        ("FACTOR_BANDS", factor)):
+        loc = _literal_dict(sf.tree, name)
+        line = loc[1] if loc is not None else 1
+        for key in sorted(set(table) - documented):
+            yield Diagnostic(
+                rule="SL502", file=sf.path, line=line,
+                message=(f"band {key!r} is enforced by the tests but "
+                         f"has no band:{key} row in "
+                         f"{project.config.engines_doc}"))
+
+
+@rule("SL503", "parity test files must import the shared band "
+               "constants")
+def sl503(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    for rel in project.config.parity_tests:
+        sf = project.file(rel)
+        if sf is None:
+            continue
+        imports_parity = False
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.endswith(".parity") or any(
+                        a.name in ("parity", "PARITY_BANDS",
+                                   "FACTOR_BANDS", "band", "factor_band")
+                        for a in node.names):
+                    imports_parity = True
+            elif isinstance(node, ast.Import):
+                if any(a.name.endswith(".parity") for a in node.names):
+                    imports_parity = True
+        if not imports_parity:
+            yield Diagnostic(
+                rule="SL503", file=rel, line=1,
+                message=("parity suite does not import the shared "
+                         "band constants (repro.core.parity); its "
+                         "literal tolerances can drift from the docs"))

@@ -1,0 +1,155 @@
+"""SL1xx — engine-contract symmetry across the three backends.
+
+The heap engine (``simulator.py``) is the reference: the set of
+``RunResult`` fields it populates on a feasible run *is* the engine
+contract.  PR 3 and PR 5 both fixed, by hand, the bug class where a new
+field (``consume_producers``, tenant attribution) was threaded through
+one engine and silently dropped by another; these rules make that class
+a lint failure:
+
+* SL101 — field populated by the heap engine but missing from a
+  feasible ``RunResult`` construction in the vectorized engine.
+* SL102 — field populated by the vectorized engine but not by the heap
+  reference (the asymmetry in the other direction).
+* SL103 — ``RunResult`` dataclass field that no feasible heap
+  construction populates at all (a field nobody fills).
+* SL104 — the jax engine neither subclasses the vectorized engine
+  class nor provides its own complete feasible ``RunResult``
+  construction (subclassing *is* the sanctioned way to "handle" the
+  contract: ``JaxStreamSim`` inherits ``_result``).
+
+Infeasible constructions (``feasible=False``) are exempt everywhere —
+they legitimately carry only ``spec``/``feasible``/``infeasible_reason``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.streamlint.engine import (Diagnostic, Project, SourceFile,
+                                     rule)
+from tools.streamlint.rules._helpers import (calls_to, dataclass_fields,
+                                             dotted, engine_registrations,
+                                             find_class, kwarg_names)
+
+#: fields a feasible construction is not required to pass explicitly
+_EXEMPT = {"spec", "feasible", "infeasible_reason"}
+
+
+def _feasible_calls(tree: ast.AST) -> list[ast.Call]:
+    out = []
+    for call in calls_to(tree, "RunResult"):
+        feas = next((kw.value for kw in call.keywords
+                     if kw.arg == "feasible"), None)
+        if isinstance(feas, ast.Constant) and feas.value is False:
+            continue
+        out.append(call)
+    return out
+
+
+def _contract_fields(calls: list[ast.Call]) -> set[str]:
+    fields: set[str] = set()
+    for call in calls:
+        fields |= kwarg_names(call)
+    return fields - _EXEMPT
+
+
+@rule("SL101", "RunResult field populated by the heap engine must be "
+               "populated by the vectorized engine")
+def sl101(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    cfg = project.config
+    heap = project.file(cfg.heap_engine)
+    vec = project.file(cfg.vectorized_engine)
+    if heap is None or vec is None:
+        return
+    contract = _contract_fields(_feasible_calls(heap.tree))
+    for call in _feasible_calls(vec.tree):
+        for field in sorted(contract - kwarg_names(call)):
+            yield Diagnostic(
+                rule="SL101", file=vec.path, line=call.lineno,
+                message=(f"feasible RunResult omits {field!r}, which "
+                         f"the heap engine populates"))
+
+
+@rule("SL102", "RunResult field populated by the vectorized engine "
+               "must be populated by the heap reference")
+def sl102(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    cfg = project.config
+    heap = project.file(cfg.heap_engine)
+    vec = project.file(cfg.vectorized_engine)
+    if heap is None or vec is None:
+        return
+    heap_fields = _contract_fields(_feasible_calls(heap.tree))
+    for call in _feasible_calls(vec.tree):
+        for field in sorted(kwarg_names(call) - heap_fields - _EXEMPT):
+            yield Diagnostic(
+                rule="SL102", file=vec.path, line=call.lineno,
+                message=(f"feasible RunResult passes {field!r}, which "
+                         f"the heap reference never populates"))
+
+
+@rule("SL103", "every non-exempt RunResult dataclass field must be "
+               "populated by the heap engine")
+def sl103(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    cfg = project.config
+    heap = project.file(cfg.heap_engine)
+    if heap is None:
+        return
+    cls = find_class(heap.tree, "RunResult")
+    if cls is None:
+        return
+    calls = _feasible_calls(heap.tree)
+    if not calls:
+        return
+    populated = _contract_fields(calls)
+    for field, lineno in dataclass_fields(cls).items():
+        if field in _EXEMPT or field in populated:
+            continue
+        yield Diagnostic(
+            rule="SL103", file=heap.path, line=lineno,
+            message=(f"RunResult field {field!r} is never populated by "
+                     f"a feasible heap-engine construction"))
+
+
+@rule("SL104", "the jax engine must subclass the vectorized engine or "
+               "construct the full RunResult contract itself")
+def sl104(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    cfg = project.config
+    heap = project.file(cfg.heap_engine)
+    vec = project.file(cfg.vectorized_engine)
+    jax_mod = project.file(cfg.jax_engine)
+    if heap is None or vec is None or jax_mod is None:
+        return
+    contract = _contract_fields(_feasible_calls(heap.tree))
+    vec_cls = engine_registrations(vec.tree).get(
+        "vectorized", "VectorizedStreamSim")
+
+    jax_cls_name = engine_registrations(jax_mod.tree).get("jax")
+    jax_cls = (find_class(jax_mod.tree, jax_cls_name)
+               if jax_cls_name else None)
+    subclasses_vec = jax_cls is not None and any(
+        (dotted(base) or "").split(".")[-1] == vec_cls
+        for base in jax_cls.bases)
+
+    calls = _feasible_calls(jax_mod.tree)
+    if calls:
+        # The jax engine opted into constructing results itself — each
+        # feasible construction must then carry the full contract.
+        for call in calls:
+            for field in sorted(contract - kwarg_names(call)):
+                yield Diagnostic(
+                    rule="SL104", file=jax_mod.path, line=call.lineno,
+                    message=(f"feasible RunResult omits {field!r}, "
+                             f"which the heap engine populates"))
+    elif not subclasses_vec:
+        line = jax_cls.lineno if jax_cls is not None else 1
+        yield Diagnostic(
+            rule="SL104", file=jax_mod.path, line=line,
+            message=(f"jax engine neither subclasses {vec_cls} nor "
+                     f"constructs RunResult; the engine contract is "
+                     f"unhandled"))
