@@ -39,14 +39,30 @@ CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
 DEFAULT_ENGINE: Optional[str] = None
 
 
-def resolve_engine(engine: Optional[str] = None) -> str:
+def resolve_engine(engine: Optional[str] = None, spec=None) -> str:
     """Effective engine for a benchmark cell: explicit argument, then the
-    --engine override, then the SimParams default."""
+    --engine override, then the SimParams default.
+
+    When the cell's :class:`ExperimentSpec` is known, pass it: a
+    requested ``jax`` cell that ``jax_supported`` rejects actually runs
+    vectorized (the ``run_many`` fallback), and its cache key must say
+    so — keying on the requested engine would serve those vectorized
+    numbers to a later genuinely-jax run (cache poisoning)."""
     if engine is not None:
-        return engine
-    if DEFAULT_ENGINE is not None:
-        return DEFAULT_ENGINE
-    return SimParams().engine
+        eng = engine
+    elif DEFAULT_ENGINE is not None:
+        eng = DEFAULT_ENGINE
+    else:
+        eng = SimParams().engine
+    if eng == "jax" and spec is not None:
+        import dataclasses
+
+        from repro.core.campaign import resolved_engine
+        if spec.params.engine != eng:
+            spec = dataclasses.replace(
+                spec, params=dataclasses.replace(spec.params, engine=eng))
+        eng = resolved_engine(spec)
+    return eng
 
 
 def params_fingerprint(engine: str, **params) -> str:
@@ -60,12 +76,15 @@ def params_fingerprint(engine: str, **params) -> str:
     return _params_fingerprint(SimParams(engine=engine, **params))
 
 
-def cache_key(name: str, engine: Optional[str] = None, **params) -> str:
+def cache_key(name: str, engine: Optional[str] = None, spec=None,
+              **params) -> str:
     """Versioned cache key: ``v2|engine=<engine>|p=<fingerprint>|<name>``.
 
     Use for every cell whose value depends on a simulator run; cells with
-    no simulator dependence may use :func:`plain_key`."""
-    eng = resolve_engine(engine)
+    no simulator dependence may use :func:`plain_key`.  Pass ``spec``
+    (the cell's :class:`ExperimentSpec`) whenever it is known so the key
+    carries the *resolved* engine — see :func:`resolve_engine`."""
+    eng = resolve_engine(engine, spec=spec)
     return (f"{CACHE_KEY_VERSION}|engine={eng}|"
             f"p={params_fingerprint(eng, **params)}|{name}")
 
@@ -123,7 +142,10 @@ class Cache:
 def sim_cell(cache: Cache, pattern: str, arch: str, workload: str,
              nc: int, msgs: int, n_runs: int = 1,
              engine: Optional[str] = None, **params) -> dict:
-    eng = resolve_engine(engine)
+    from repro.core.patterns import pattern_spec
+    rep = pattern_spec(pattern, arch, workload, nc, total_messages=msgs,
+                       engine=resolve_engine(engine), **params)
+    eng = resolve_engine(engine, spec=rep)
     key = cache_key(f"{pattern}|{arch}|{workload}|{nc}|{msgs}|{n_runs}",
                     engine=eng, **params)
 

@@ -24,7 +24,9 @@ Campaign cells share the bench cache, so re-running a finished (or
 interrupted) campaign is incremental."""
 
 import argparse
+import glob
 import json
+import math
 import os
 import sys
 import time
@@ -63,19 +65,86 @@ MODULES = [
 def write_bench_json(name: str, rows: list, wall_s: float) -> str:
     """Machine-readable companion to the CSV: one
     ``results/BENCH_<name>.json`` per bench module (CI uploads them as
-    artifacts), mapping each cell name to its measured row."""
+    artifacts), mapping each cell name to its measured row.
+
+    NaN never reaches the artifact as a bare value: a non-finite
+    ``us_per_call`` (infeasible cells) is written as ``null`` plus an
+    explicit ``"status": "nan"`` marker, and the dump runs with
+    ``allow_nan=False`` so any *other* NaN that sneaks into a row is a
+    loud ``ValueError`` at write time — a stale artifact full of
+    silent ``NaN`` literals (not even valid JSON) is how the chaos
+    bench rot went unnoticed."""
     out = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    cells = {}
+    for n, us, derived in rows:
+        cell: dict = {"us_per_call": us, "derived": derived}
+        if not math.isfinite(us):
+            cell["us_per_call"] = None
+            cell["status"] = "nan"
+        cells[n] = cell
     payload = {
         "module": name,
         "wall_s": round(wall_s, 3),
         "engine_override": common.DEFAULT_ENGINE,
-        "cells": {n: {"us_per_call": us, "derived": derived}
-                  for n, us, derived in rows},
+        "cells": cells,
     }
     with open(out, "w") as f:
-        json.dump(payload, f, indent=1, allow_nan=True)
+        json.dump(payload, f, indent=1, allow_nan=False)
     return out
+
+
+def _registered_artifact_names() -> set:
+    """Every BENCH_<name>.json stem the current bench registry can
+    produce: one per module plus one per *named* campaign."""
+    names = {name for name, _ in MODULES}
+    names |= {f"campaign_{n}" for n in NAMED_CAMPAIGNS}
+    return names
+
+
+def check_artifacts() -> list[str]:
+    """Validate ``results/BENCH_*.json`` against the bench registry.
+
+    Returns human-readable problem strings (empty = clean).  Two
+    failure classes, both of which have bitten before:
+
+    * an artifact whose stem maps to no registered bench module or
+      named campaign — a leftover from a deleted bench (the stale
+      ``BENCH_chaos.json``) that CI can never refresh;
+    * a bare ``NaN``/``Infinity`` literal, or a non-finite/null
+      ``us_per_call`` without the explicit ``"status": "nan"``
+      marker — a number downstream tooling would silently propagate.
+    """
+    known = _registered_artifact_names()
+    problems: list[str] = []
+
+    def _reject(const: str):
+        raise ValueError(f"bare {const} literal")
+
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              "BENCH_*.json"))):
+        base = os.path.basename(path)
+        stem = base[len("BENCH_"):-len(".json")]
+        if stem not in known:
+            problems.append(
+                f"{base}: no registered bench module or named campaign "
+                f"produces it (stale artifact — delete it)")
+            continue
+        try:
+            with open(path) as f:
+                payload = json.load(f, parse_constant=_reject)
+        except ValueError as e:
+            problems.append(f"{base}: invalid JSON ({e})")
+            continue
+        for n, cell in payload.get("cells", {}).items():
+            us = cell.get("us_per_call")
+            bad = us is None or (isinstance(us, float)
+                                 and not math.isfinite(us))
+            if bad and cell.get("status") != "nan":
+                problems.append(
+                    f"{base}: cell {n!r} has non-finite us_per_call "
+                    f"without the explicit 'status': 'nan' marker")
+    return problems
 
 #: --campaign demo: a small paper-style grid (Fig 6 slice + tenants),
 #: including one overflow-regime cell (the dts/4-consumer cell gets a
@@ -119,6 +188,11 @@ def run_campaign_cli(args, cache: Cache) -> None:
         # the --engine escape hatch applies to campaign cells too
         # (explicit per-spec params win)
         spec.params.setdefault("engine", args.engine)
+        if args.engine == "jax":
+            # opt the grid into the whole-run device program; cells
+            # outside its validated regime fall back per cell (the
+            # fallback is counted in the campaign result JSON)
+            spec.params.setdefault("jax_device_loop", True)
     res = run_campaign(spec, cache=cache, workers=args.workers,
                        progress=lambda m: print(f"# {m}", file=sys.stderr))
     out = args.campaign_out or os.path.join(
@@ -166,7 +240,19 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="campaign process fan-out (default: one per "
                          "CPU, capped by the group count)")
+    ap.add_argument("--check-artifacts", action="store_true",
+                    help="validate results/BENCH_*.json against the "
+                         "bench registry (stale artifacts, bare NaN) "
+                         "and exit")
     args = ap.parse_args()
+    if args.check_artifacts:
+        problems = check_artifacts()
+        for p in problems:
+            print(f"ARTIFACT: {p}", file=sys.stderr)
+        if problems:
+            raise SystemExit(1)
+        print("# artifacts OK", file=sys.stderr)
+        return
     if args.campaign and args.only:
         ap.error("--campaign replaces the bench modules; drop the "
                  f"positional module argument {args.only!r}")

@@ -67,6 +67,25 @@ def params_fingerprint(params: SimParams) -> str:
     return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
+def resolved_engine(spec: ExperimentSpec) -> str:
+    """The engine a spec will *actually* run on, after the ``run_many``
+    fallback: a requested ``"jax"`` cell that ``jax_supported`` rejects
+    executes on the vectorized engine, and must be cached as such.
+
+    Every cache key MUST be built from this, never from the requested
+    ``spec.params.engine`` — keying a fallback cell under ``jax`` both
+    poisons the jax namespace (a later run in a jax-capable environment
+    is served vectorized numbers) and forks it from the identical
+    vectorized cell (same computation measured twice)."""
+    eng = spec.params.engine
+    if eng == "jax":
+        from repro.core import jax_engine
+        ok, _why = jax_engine.jax_supported(spec)
+        if not ok:
+            return "vectorized"
+    return eng
+
+
 # ---------------------------------------------------------------------------
 # Declarative campaign grids
 # ---------------------------------------------------------------------------
@@ -241,10 +260,19 @@ def cell_key(cell: CellSpec) -> str:
     same contract as ``benchmarks.common.cache_key`` (a simulator-default
     change or engine switch can never serve a stale campaign cell).
     Fingerprints the *fully-resolved* experiment params, including
-    pattern-implied defaults like the broadcast-gather reply factor."""
-    p = cell.experiment().params
+    pattern-implied defaults like the broadcast-gather reply factor.
+
+    Keys on the :func:`resolved_engine`, not the requested one: a jax
+    cell that falls back to vectorized shares its key (tag *and*
+    fingerprint) with the identical genuine-vectorized cell — it ran
+    the same computation — and never occupies the jax namespace."""
+    exp = cell.experiment()
+    p = exp.params
+    eng = resolved_engine(exp)
+    if eng != p.engine:
+        p = dataclasses.replace(p, engine=eng)
     fp = params_fingerprint(p)
-    return (f"{CACHE_KEY_VERSION}|engine={p.engine}|p={fp}|campaign|"
+    return (f"{CACHE_KEY_VERSION}|engine={eng}|p={fp}|campaign|"
             f"{cell.pattern}|{cell.arch}|{cell.workload}|"
             f"c{cell.n_consumers}|m{cell.total_messages}|"
             f"t{cell.tenants}.{cell.tenant_isolation}|s{cell.seed}")
@@ -271,6 +299,10 @@ class CampaignResult:
     averaged: list         # Summary per unique cell group (seed-averaged)
     wall_s: float
     n_cached: int          # cells served from the cache
+    #: cells that requested one engine but ran another (the ``run_many``
+    #: jax→vectorized fallback); surfaced in the JSON so a "jax
+    #: campaign" whose numbers are actually vectorized is never silent
+    n_fallback: int = 0
 
     def to_json(self) -> str:
         return json.dumps({
@@ -279,6 +311,7 @@ class CampaignResult:
             "wall_s": self.wall_s,
             "n_cells": len(self.cells),
             "n_cached": self.n_cached,
+            "n_fallback": self.n_fallback,
             "cells": [{"key": cell_key(c),
                        "summary": dataclasses.asdict(s)}
                       for c, s in zip(self.cells, self.summaries)],
@@ -369,6 +402,16 @@ def run_campaign(spec: CampaignSpec, *, cache: Optional[Any] = None,
                 say(f"group {cells[futs[fut][0]].group_key()[:4]} done")
 
     ordered = [summaries[i] for i in range(len(cells))]
+    n_fallback = sum(
+        1 for c, s in zip(cells, ordered)
+        if s.engine and s.engine != c.experiment().params.engine)
+    if n_fallback:
+        import warnings
+        warnings.warn(
+            f"campaign {spec.name!r}: {n_fallback}/{len(cells)} cell(s) "
+            f"fell back from the requested engine (see Summary.engine); "
+            f"reported numbers are NOT from the engine you asked for",
+            RuntimeWarning, stacklevel=2)
     grouped: dict[tuple, list[Summary]] = {}
     for c, s in zip(cells, ordered):
         grouped.setdefault(c.group_key(), []).append(s)
@@ -376,4 +419,4 @@ def run_campaign(spec: CampaignSpec, *, cache: Optional[Any] = None,
     return CampaignResult(spec=spec, cells=cells, summaries=ordered,
                           # streamlint: disable=SL403 -- telemetry (see t0)
                           averaged=averaged, wall_s=time.time() - t0,
-                          n_cached=n_cached)
+                          n_cached=n_cached, n_fallback=n_fallback)

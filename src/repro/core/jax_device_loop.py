@@ -1,0 +1,1226 @@
+"""Whole-run JAX device programs for the StreamSim *wave* regime.
+
+PR 6 put the vectorized engine's hot kernels on JAX devices but kept the
+cohort event loop in Python, so end-to-end the ``jax`` engine dispatched
+thousands of tiny device calls and lost to NumPy (ROADMAP item 1).  This
+module inverts that control flow for the regime every deployment-grid
+cell lives in: it compiles the **entire run** — admission gating by
+publisher-confirm windows, hop-graph resource FIFO serving, the windowed
+broker pump with prefetch gates and batched ack-multiples, feedback
+replies — into one ``lax.scan`` over *generations* of messages, with
+stacked seed-lanes vmapped exactly like the kernel layer and whole cells
+batched by :func:`run_wave_cells` (a ``vmap``-over-cells driver in the
+spirit of ``fifo_scan_cells``).
+
+**The wave contract.**  The device program is *not* the event loop — it
+is a wave-synchronous re-formulation that is exact where the regime
+makes exactness cheap and banded where it does not:
+
+* Messages advance in per-producer *generations* of ``G`` messages
+  (``G <= min(confirm_window, prefetch // 2)``, shrunk until no consumer
+  can see more than ``prefetch // 2`` deliveries per generation).  A
+  generation's sends are gated by the confirm ring exactly like the
+  engines' confirm window (message ``i`` waits on confirm ``i - W``).
+* Every shared resource keeps per-chain FIFO carries across generations
+  (pipes: one chain; pools: ``k`` interleaved chains with per-serve
+  earliest-free ordering — the vectorized engine's pool semantics), so
+  capacity/work conservation is exact and throughput parity holds at
+  the vectorized engine's own band.
+* Cross-phase service *order* inside one generation is
+  publish -> deliver -> reply rather than globally time-sorted, so
+  latency-sensitive metrics (RTT) on **saturated** cells carry a wider
+  tolerance than the cohort engines (see ``repro.core.parity``
+  ``device_loop.*`` bands and docs/engines.md).
+* Acks flush at every ``ack_batch`` boundary *and* at generation end
+  (the engines flush on prefetch pressure instead); jitter draws are
+  re-realized per lane from the same per-seed streams (identical
+  distribution, different realization than the cohort engines).
+
+**Backends.**  The whole program is written once against a tiny ``ops``
+namespace with two implementations: ``jax`` (``lax.scan`` +
+``associative_scan`` segmented FIFO closed forms, jitted under the
+scoped-x64 contract of :mod:`repro.core.jax_engine`) and ``numpy`` (a
+plain Python generation loop over the *same* step function).  The NumPy
+backend is the step-for-step oracle: ``tests/test_flow_control_props.py``
+property-tests that both backends produce the same per-generation trace.
+
+**Pallas.**  The hottest fused step — the pump window assignment
+(round-robin consumer pick + prefetch-ring gate + depart clamp) — has a
+Pallas TPU kernel (:func:`_pump_assign_pallas`) behind a
+:func:`pallas_enabled` capability gate with the XLA closed form as
+fallback; on CPU hosts the kernel is exercised in interpreter mode by
+the test suite (``REPRO_PALLAS=interpret``).
+
+Pad-and-mask: member axes pad to the next power of two with invalid
+members carrying ``+inf`` clocks, zero holds and dummy carry chains —
+inert by the same contract as the kernel layer (property-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.simulator import ExperimentSpec
+from repro.core.vectorized import VectorizedStreamSim, _align_paths
+
+Array = Any
+
+_INF = np.inf
+#: integer sentinel for "no next ack boundary" (never survives: the last
+#: valid member of every consumer segment is always a boundary)
+_IBIG = np.int64(2) ** 40
+
+
+# ---------------------------------------------------------------------------
+# Capability gates
+# ---------------------------------------------------------------------------
+
+
+def pallas_enabled() -> str:
+    """Capability gate for the Pallas pump-assignment kernel.
+
+    Returns ``"compiled"`` on a TPU backend, ``"interpret"`` when forced
+    via ``REPRO_PALLAS=interpret`` (CPU CI exercises the kernel this
+    way), and ``""`` (use the XLA fallback) otherwise."""
+    mode = os.environ.get("REPRO_PALLAS", "")
+    try:
+        import jax
+        from jax.experimental import pallas as pl  # noqa: F401
+    except Exception:
+        return ""
+    if mode == "interpret":
+        return "interpret"
+    try:
+        if jax.default_backend() == "tpu":
+            return "compiled"
+    except Exception:
+        return ""
+    return ""
+
+
+def device_loop_supported(spec: ExperimentSpec) -> tuple[bool, str]:
+    """Can the whole-run device program take this cell?  ``(ok, why)``.
+
+    Requires JAX, a work-sharing/feedback pattern, a statically
+    flow-event-free regime (no credit blocking / reject-publish
+    reachable — the wave program carries no retry machinery), and a
+    generation size that keeps every consumer under half its prefetch
+    per generation.  Unsupported cells silently use the ordinary
+    per-cohort jax path; this is a *request*, not a demand."""
+    from repro.core.jax_engine import jax_available
+    if not jax_available():
+        return False, "jax is not importable in this environment"
+    if spec.pattern not in ("work_sharing", "feedback"):
+        return False, f"pattern {spec.pattern!r} is not wave-formulated"
+    sim = VectorizedStreamSim(spec)
+    return _device_loop_ok(sim)
+
+
+#: calibration knobs for the parity harness (tests never set these):
+#: force the reply-lag / egress-lag generation offsets instead of the
+#: static estimate in build_static
+_FORCE_DELAY: Optional[int] = None
+_FORCE_DEGR: Optional[int] = None
+
+
+def _device_loop_ok(sim: VectorizedStreamSim) -> tuple[bool, str]:
+    spec, p = sim.spec, sim.p
+    if spec.pattern not in ("work_sharing", "feedback"):
+        return False, f"pattern {spec.pattern!r} is not wave-formulated"
+    if spec.total_messages // max(1, spec.n_producers) < 1:
+        return False, "fewer messages than producers"
+    if sim.flow_events_possible():
+        return False, ("flow-control events (credit blocking / overflow) "
+                       "are reachable; the wave program models neither")
+    G = _pick_generation(sim)
+    if G is None:
+        return False, ("no generation size keeps every consumer under "
+                       "prefetch/2 deliveries per generation")
+    # Universal run-length clause (any pattern): the wave schedule's
+    # lockstep generation barriers accumulate against the cohort
+    # loop's continuous pipelining, so throughput deviation grows with
+    # msgs/producer regardless of the confirm window or jitter
+    # (measured on work_sharing dts c8: 0.4% at 128, 3.9% at 256,
+    # 6.8% at 512, 8.1% at 1024 msgs/producer — crossing the 6% band
+    # between 256 and 512).  Every validated cell (bench e2e rows,
+    # parity suites, the calibration grid) sits at <= 256.
+    if spec.total_messages // max(1, spec.n_producers) > 256:
+        return False, (f"run length {spec.total_messages // max(1, spec.n_producers)}"
+                       " msgs/producer > 256: generation-barrier drift "
+                       "accumulates over long runs (throughput deviation "
+                       "grows with nGen past the parity band)")
+    if spec.pattern == "feedback":
+        # The wave formulation carries feedback replies through a static
+        # delay-line pipeline (a fixed reply lag in units of
+        # generations).  That approximation was calibrated against the
+        # cohort engines across the deployment grid and holds only in a
+        # specific regime; outside it the static schedule under-tracks
+        # the cohort loop's continuous pipelining by far more than any
+        # parity band, so those cells stay on the per-cohort path:
+        #
+        # * coarse generations (G >= 4) — at G < 4 the per-generation
+        #   reply-lag discretization error dominates the schedule (no
+        #   constant lag fits; measured 28-57%% throughput deviation);
+        # * a window that binds but does not saturate, on a run not
+        #   much longer than the window (2 * G < W < M <= 2 * W with
+        #   M = msgs/producer) — at W <= 2G the run is a hard window
+        #   stall the cadence floor only approximates, at W >= M the
+        #   window never binds (burst-then-drain, no generation
+        #   cadence at all), and at M > 2W the constant reply lag
+        #   drifts over the run (RTT deviation grows with nGen);
+        # * not the single-broker ``mss`` arch, whose feedback cells
+        #   keep structural residuals across the whole (G, W) plane.
+        M = spec.total_messages // max(1, spec.n_producers)
+        size = spec.workload.payload_bytes
+        W = max(2, min(p.confirm_window, p.window_bytes // size))
+        if spec.arch == "mss":
+            return False, ("feedback on the single-broker mss arch is "
+                           "outside the wave model's validated regime")
+        if G < 4:
+            return False, (f"feedback generations too fine (G={G} < 4): "
+                           "the static reply-lag pipeline cannot track "
+                           "the cohort loop at this granularity")
+        if W <= 2 * G:
+            return False, (f"confirm window W={W} <= 2G={2 * G}: "
+                           "hard window-stall regime, outside the wave "
+                           "model's validated feedback corridor")
+        if W >= M:
+            return False, (f"confirm window W={W} >= msgs/producer {M}: "
+                           "the window never binds (burst regime), "
+                           "outside the wave model's validated corridor")
+        if M > 2 * W:
+            return False, (f"run length {M} msgs/producer > 2W={2 * W}: "
+                           "the static reply lag drifts over runs much "
+                           "longer than the confirm window (measured "
+                           "RTT deviation grows with nGen)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Static build: topology -> arrays
+# ---------------------------------------------------------------------------
+
+
+def _pick_generation(sim: VectorizedStreamSim) -> Optional[int]:
+    """Largest workable generation size G.
+
+    Upper bounds: the cohort engines' publish *round* (the wave's
+    phase interleaving granularity — publishes of one generation serve
+    before deliveries of the previous at shared resources, exactly the
+    convoy the vectorized engine exhibits per round, so matching its
+    round keeps the distortion inside the vectorized engine's own
+    bands); the confirm window; and a per-consumer load of at most
+    prefetch//2 per generation, so prefetch gates always resolve
+    against *earlier* generations' ack rings."""
+    spec, p = sim.spec, sim.p
+    nP = spec.n_producers
+    size = spec.workload.payload_bytes
+    W = max(2, min(p.confirm_window, p.window_bytes // size))
+    nq, q_consumers, prod_queues, _ = sim._work_topology()
+    budget = max(1, p.prefetch // 2)
+    rnd = max(1, int(getattr(sim, "_round", 8)))
+    for G in range(min(W, budget, rnd), 0, -1):
+        # per-queue arrivals per generation: every producer publishing
+        # into the queue lands at most ceil(G * |its queues touching q|)
+        # ... message routing is round-robin, so producer pr sends at
+        # most ceil(G / len(prod_queues[pr])) of a generation to q
+        load_ok = True
+        for qi in range(nq):
+            arrivals = sum(-(-G // len(prod_queues[pr]))
+                           for pr in range(nP) if qi in prod_queues[pr])
+            per_consumer = -(-arrivals // max(1, len(q_consumers[qi])))
+            if per_consumer > budget:
+                load_ok = False
+                break
+        if load_ok and G <= budget:
+            return G
+    return None
+
+
+def _path_slots(paths: dict, res_index: dict, kinds: dict,
+                size: int) -> tuple[dict, int]:
+    """Resolve + align a {combo_key: [PathElement]} map into per-combo
+    per-slot static tuples ``(kind, rid, hold_base, lat)`` where kind is
+    0 latency-only / 1 pipe / 2 pool."""
+    aligned, n_slots = _align_paths(paths)
+    out = {}
+    for key, els in aligned.items():
+        rows = []
+        for el in els:
+            if el is None or el.resource is None:
+                rows.append((0, 0, 0.0,
+                             0.0 if el is None else el.latency_s))
+                continue
+            spec = res_index[el.resource]
+            nbytes = size * el.byte_factor + el.extra_bytes
+            if spec.kind == "pipe":
+                hold = spec.service_s + (
+                    nbytes / spec.rate_Bps if spec.rate_Bps else 0.0)
+                rows.append((1, kinds[el.resource], hold, el.latency_s))
+            else:
+                hold = spec.service_s + nbytes * spec.per_byte_s
+                rows.append((2, kinds[el.resource], hold, el.latency_s))
+        out[key] = rows
+    return out, n_slots
+
+
+@dataclasses.dataclass
+class WaveStatic:
+    """Everything the device program needs, as NumPy arrays + a
+    hashable ``signature`` (the compile/vmap-batching bucket)."""
+
+    meta: dict                 # hashable ints/flags/pool layout
+    xs: dict                   # per-generation arrays, leading axis nGen
+    inv: dict                  # loop-invariant arrays (tables, scalars)
+    sizes: dict                # python ints used by the host wrapper
+
+    def signature(self) -> tuple:
+        return (tuple(sorted(self.meta.items())),
+                tuple(sorted((k, v.shape, str(v.dtype))
+                             for k, v in self.xs.items())),
+                tuple(sorted((k, v.shape, str(v.dtype))
+                             for k, v in self.inv.items())))
+
+
+def build_static(sim: VectorizedStreamSim) -> WaveStatic:
+    """Extract the wave program's static schedule from a constructed
+    (but not yet run) engine instance."""
+    spec, p, inv = sim.spec, sim.p, sim.inv
+    arch = sim.arch
+    nP, nC = spec.n_producers, spec.n_consumers
+    M = spec.total_messages // nP
+    size = spec.workload.payload_bytes
+    reply_size = max(1, int(size * p.reply_factor))
+    feedback = spec.pattern == "feedback"
+    W = max(2, min(p.confirm_window, p.window_bytes // size))
+    G = _pick_generation(sim)
+    assert G is not None, "call _device_loop_ok first"
+    G = min(G, M)
+    nGen = -(-M // G)
+    L = sim._lanes
+
+    nq, q_consumers, prod_queues, _ = sim._work_topology()
+    q_home = np.arange(nq) % inv.n_dsn
+    reply_home = (nq + np.arange(nP)) % inv.n_dsn
+    pr_node = np.arange(nP) % inv.n_producer_nodes
+    pr_bnode = np.arange(nP) % inv.n_dsn
+    c_node = np.arange(nC) % inv.n_consumer_nodes
+    c_bnode = (np.arange(nC) + 1) % inv.n_dsn
+    tcols = sim._tenant_cols
+    ppt, cpt = sim._ppt, sim._cpt
+
+    # resource registry: flat chain ids (pipes 1 chain, pools k chains)
+    res_keys = sorted(sim.arch.resources)
+    res_index = {k: sim.arch.resources[k] for k in res_keys}
+    rid_of = {k: i for i, k in enumerate(res_keys)}
+    NR = len(res_keys)
+    k_arr = np.ones(NR, dtype=np.int64)
+    chain_base = np.zeros(NR, dtype=np.int64)
+    pools = []
+    base = 0
+    for k in res_keys:
+        s = res_index[k]
+        kk = max(1, s.servers) if s.kind == "pool" else 1
+        chain_base[rid_of[k]] = base
+        k_arr[rid_of[k]] = kk
+        if s.kind == "pool":
+            pools.append((base, kk))
+        base += kk
+    NCH = base                         # +1 dummy row appended by backends
+
+    def tkey(t: int) -> tuple:
+        return (t,) if tcols else ()
+
+    # -- publish paths: one combo per (pr, q), aligned together ----------
+    pub_paths = {}
+    for pr in range(nP):
+        for qi in prod_queues[pr]:
+            pub_paths[(pr, qi)] = arch.publish_path(
+                int(pr_node[pr]), int(pr_bnode[pr]), int(q_home[qi]),
+                *tkey(pr // ppt))
+    pub_slots, S_pub = _path_slots(pub_paths, res_index, rid_of, size)
+    pub_keys = sorted(pub_slots)
+    pub_idx_of = {k: i for i, k in enumerate(pub_keys)}
+    pub_tab = np.zeros((len(pub_keys), S_pub, 4))
+    for k, rows in pub_slots.items():
+        pub_tab[pub_idx_of[k]] = rows
+
+    # -- delivery paths: aligned per queue (like _deliver_queue batches),
+    #    padded to the max slot count with inert latency-only slots -----
+    del_aligned = {}
+    S_del = 0
+    for qi in range(nq):
+        dp = {int(c): arch.delivery_path(
+            int(c_bnode[c]), int(q_home[qi]), int(c_node[c]),
+            *tkey(int(c) // cpt)) for c in q_consumers[qi]}
+        slots, ns = _path_slots(dp, res_index, rid_of, size)
+        del_aligned[qi] = slots
+        S_del = max(S_del, ns)
+    kq = np.array([len(q_consumers[qi]) for qi in range(nq)],
+                  dtype=np.int64)
+    kq_max = int(kq.max())
+    q_cons_tab = np.zeros((nq, kq_max), dtype=np.int64)
+    del_tab = np.zeros((nq, kq_max, S_del, 4))
+    for qi in range(nq):
+        for j, c in enumerate(q_consumers[qi]):
+            q_cons_tab[qi, j] = int(c)
+            rows = del_aligned[qi][int(c)]
+            del_tab[qi, j, :len(rows)] = rows
+
+    # -- reply paths (feedback) -----------------------------------------
+    if feedback:
+        rp_paths = {(int(c), pr): arch.reply_publish_path(
+            int(c_node[c]), int(c_bnode[c]), int(reply_home[pr]),
+            *tkey(int(c) // cpt))
+            for pr in range(nP)
+            for c in sorted({int(x) for qi in prod_queues[pr]
+                             for x in q_consumers[qi]})}
+        rp_slots, S_rp = _path_slots(rp_paths, res_index, rid_of,
+                                     reply_size)
+        rp_tab = np.zeros((nC, nP, S_rp, 4))
+        for (c, pr), rows in rp_slots.items():
+            rp_tab[c, pr] = rows
+        rd_aligned = {}
+        S_rd = 0
+        for pr in range(nP):
+            slots, ns = _path_slots(
+                {0: arch.reply_delivery_path(
+                    int(reply_home[pr]), int(pr_bnode[pr]),
+                    int(pr_node[pr]), *tkey(pr // ppt))},
+                res_index, rid_of, reply_size)
+            rd_aligned[pr] = slots[0]
+            S_rd = max(S_rd, ns)
+        rd_tab = np.zeros((nP, S_rd, 4))
+        for pr in range(nP):
+            rows = rd_aligned[pr]
+            rd_tab[pr, :len(rows)] = rows
+    else:
+        S_rp = S_rd = 0
+        rp_tab = np.zeros((nC, nP, 0, 4))
+        rd_tab = np.zeros((nP, 0, 4))
+
+    # combined-serve slot axis: all legs pad to one width so each
+    # step's transits run as a SINGLE serve over the concatenated
+    # member axis (shared resources then see competing flows in true
+    # arrival order); the extra slots are kind-0 inert pass-throughs
+    S_max = max(S_pub, S_del, S_rp, S_rd)
+
+    def pad_slots(tab: np.ndarray) -> np.ndarray:
+        pad = ([(0, 0)] * (tab.ndim - 2)
+               + [(0, S_max - tab.shape[-2]), (0, 0)])
+        return np.pad(tab, pad)
+
+    pub_tab, del_tab = pad_slots(pub_tab), pad_slots(del_tab)
+    rp_tab, rd_tab = pad_slots(rp_tab), pad_slots(rd_tab)
+
+    # -- per-generation member arrays ------------------------------------
+    N = nP * G
+    Np = 1 << max(0, N - 1).bit_length()       # pow2 pad-and-mask bucket
+    pr_m = np.tile(np.repeat(np.arange(nP), G), (nGen, 1))
+    loc = np.tile(np.arange(G), nP)
+    valid = np.zeros((nGen, Np), dtype=bool)
+    i_glob = np.zeros((nGen, Np), dtype=np.int64)
+    q_m = np.zeros((nGen, Np), dtype=np.int64)
+    pub_ci = np.zeros((nGen, Np), dtype=np.int64)
+    mem_id = np.zeros((nGen, Np), dtype=np.int64)
+    for g in range(nGen):
+        ii = g * G + loc                        # per-producer msg index
+        ok = ii < M
+        valid[g, :N] = ok
+        i_glob[g, :N] = np.minimum(ii, M - 1)
+        for pr in range(nP):
+            ql = np.asarray(prod_queues[pr])
+            sl = slice(pr * G, (pr + 1) * G)
+            qs = ql[(pr + ii[sl]) % ql.size]
+            q_m[g, sl] = qs
+            pub_ci[g, sl] = [pub_idx_of[(pr, int(q))] for q in qs]
+        mem_id[g, :N] = pr_m[g] * M + np.minimum(ii, M - 1)
+    pr_mat = np.zeros((nGen, Np), dtype=np.int64)
+    pr_mat[:, :N] = pr_m
+    has_gate = valid & (i_glob >= W)
+    # invalid pad members write confirm slot W (a scratch column past
+    # the ring) so masked writes can never collide with live slots
+    conf_slot = np.where(valid, i_glob % W, W)
+
+    # static round-robin bases: per-generation queue/consumer/producer
+    # arrival counts are order-independent, so the RR cursors are
+    # precomputed instead of carried
+    cnt_q = np.zeros((nGen, nq), dtype=np.int64)
+    cnt_c = np.zeros((nGen, nC), dtype=np.int64)
+    cq = np.zeros(nq, dtype=np.int64)
+    cc = np.zeros(nC, dtype=np.int64)
+    for g in range(nGen):
+        cnt_q[g], cnt_c[g] = cq.copy(), cc.copy()
+        counts = np.bincount(q_m[g][valid[g]], minlength=nq)
+        for qi in range(nq):
+            n, k = int(counts[qi]), int(kq[qi])
+            for pp in range(n):
+                cc[q_cons_tab[qi, (cq[qi] + pp) % k]] += 1
+            cq[qi] += n
+    # producer reply counts: pr receives exactly its own valid msgs;
+    # padded with a scratch column for the dummy reply chain
+    per_gen_p = np.stack([np.bincount(pr_mat[g][valid[g]], minlength=nP)
+                          for g in range(nGen)])
+    cnt_p = np.concatenate([np.zeros((1, nP), dtype=np.int64),
+                            np.cumsum(per_gen_p, axis=0)[:-1]])
+    cnt_p = np.concatenate(
+        [cnt_p, np.zeros((nGen, 1), dtype=np.int64)], axis=1)
+
+    # software-pipelined scan inputs: step g publishes generation g and
+    # delivers generation g-1; the reply legs trail by an *adaptive*
+    # lag — replies for generation g re-enter the shared ingress
+    # resources roughly a delivery-path-plus-receive latency after the
+    # publishes, during which the confirm window lets publishes run up
+    # to W/G generations ahead.  Serving reply-publish at step
+    # g+1+DELAY (and reply-delivery one step later) keeps each step's
+    # combined serve populated with flows whose *arrival clocks*
+    # actually coexist, which is what makes arrival-order service at
+    # shared chains match the engines.  Every leg's static arrays are
+    # shifted by its offset, with all-False validity masks filling the
+    # prologue/drain steps.
+    # The reply lag DELAY (in generations) is physical, not a window
+    # artifact: rp(g) enqueues one publish+delivery+receive+process
+    # path-latency after pub(g), during which publishes advance one
+    # generation per tau — the per-generation cadence, itself the max
+    # of the busiest chain's per-generation work and the confirm-
+    # window stall cadence (when W binds, a generation can only clear
+    # admission every conf-roundtrip/(W/G)).  Serving reply-publish at
+    # step g+1+DELAY (and reply-delivery one step later) keeps each
+    # step's combined serve populated with flows whose *arrival
+    # clocks* actually coexist, which is what makes arrival-order
+    # service at shared chains match the engines.  Every leg's static
+    # arrays are shifted by its offset, with all-False validity masks
+    # filling the prologue/drain steps.
+    if feedback:
+        work = np.zeros((2, NR))
+        for m_i in range(N):
+            if not valid[0, m_i]:
+                continue
+            pr_i, q_i = int(pr_m[0][m_i]), int(q_m[0, m_i])
+            legs = [(0, pub_tab[pub_ci[0, m_i]]), (1, del_tab[q_i, 0]),
+                    (0, rp_tab[int(q_cons_tab[q_i, 0]), pr_i]),
+                    (1, rd_tab[pr_i])]
+            for sd, rows in legs:
+                for kk_, r_, h_, _l in rows:
+                    if kk_ > 0:
+                        work[sd, int(r_)] += (
+                            h_ / max(1, int(k_arr[int(r_)])))
+        tau = float(work.max())
+
+        def combo_sum(tab: np.ndarray) -> float:
+            t = tab.reshape(-1, tab.shape[-2], 4)
+            live = (t[:, :, 0] > 0).any(axis=1)
+            tot = (t[:, :, 2] + t[:, :, 3]).sum(axis=1)
+            return float(tot[live].mean()) if live.any() else 0.0
+
+        lag_pub = combo_sum(pub_tab)
+        # window-bound cadence floor: with at most W unconfirmed, a
+        # generation clears admission every pub-confirm-roundtrip per
+        # W/G outstanding generations
+        tau_gen = max(tau, lag_pub / max(1.0, W / G))
+        # pub enqueue -> reply-publish enqueue path latency
+        lag_rp = (lag_pub + combo_sum(del_tab)
+                  + sim._recv_latency(size) + sim._proc_s)
+        delay = (int(np.clip(round(lag_rp / tau_gen), 1, nGen))
+                 if tau_gen > 0 else 1)
+        if _FORCE_DELAY is not None:       # debug/calibration knob
+            delay = int(np.clip(_FORCE_DELAY, 1, nGen))
+        # egress alignment: reply-deliveries re-enter the egress
+        # resources a delivery + receive + reply-publish lag after the
+        # corresponding deliveries, so rd(g) genuinely contends with
+        # del(g + De) there.  The delivery leg is delayed by
+        # dlag = delay - De so the two flows meet in the same step's
+        # combined serve.  Cross-direction step offsets are free:
+        # pub/rp and del/rd live on different chain copies.
+        lag_e = (combo_sum(del_tab) + sim._recv_latency(size)
+                 + combo_sum(rp_tab))
+        d_egr = (int(np.clip(round(lag_e / tau_gen), 1,
+                             max(1, delay - 1)))
+                 if tau_gen > 0 else 1)
+        if _FORCE_DEGR is not None:        # debug/calibration knob
+            d_egr = int(np.clip(_FORCE_DEGR, 1, max(1, delay - 1)))
+        dlag = delay - d_egr
+    else:
+        delay, d_egr, dlag = 1, 1, 0
+    depth = (2 + delay) if feedback else 1
+    nSteps = nGen + depth
+
+    def shift(a: np.ndarray, by: int) -> np.ndarray:
+        out = np.zeros((nSteps,) + a.shape[1:], dtype=a.dtype)
+        out[by:by + nGen] = a
+        return out
+
+    meta = dict(
+        Np=Np, L=L, S_pub=S_pub, S_del=S_del, S_rp=S_rp, S_rd=S_rd,
+        S_max=S_max, feedback=feedback, NR=NR, NCH=NCH, nq=nq, nC=nC,
+        nP=nP, kq_max=kq_max, P=int(p.prefetch), B=int(p.ack_batch),
+        W=W, G=G, nGen=nGen, nSteps=nSteps, delay=delay, dlag=dlag,
+        ring=d_egr, pools=tuple(pools))
+    xs = dict(
+        pub_valid=shift(valid, 0), pub_pr=shift(pr_mat, 0),
+        pub_ci=shift(pub_ci, 0), pub_has_gate=shift(has_gate, 0),
+        pub_conf_slot=shift(np.where(valid, conf_slot, W), 0),
+        del_valid=shift(valid, 1 + dlag), del_q=shift(q_m, 1 + dlag),
+        del_cnt_q=shift(cnt_q, 1 + dlag),
+        del_cnt_c=shift(cnt_c, 1 + dlag),
+        dly=np.arange(nSteps) % d_egr,
+        dlyp=np.arange(nSteps) % (1 + dlag))
+    xs["pub_conf_slot"][nGen:] = W      # drain steps hit the scratch slot
+    if feedback:
+        xs.update(rp_valid=shift(valid, 1 + delay),
+                  rp_pr=shift(pr_mat, 1 + delay),
+                  rp_cnt_p=shift(cnt_p, 1 + delay),
+                  rd_valid=shift(valid, 2 + delay),
+                  rd_pr=shift(pr_mat, 2 + delay))
+    inv_arrays = dict(
+        pub_tab=pub_tab, del_tab=del_tab, rp_tab=rp_tab, rd_tab=rd_tab,
+        q_cons_tab=q_cons_tab, kq=kq, k_arr=k_arr, chain_base=chain_base,
+        scal=np.array([arch.client_flush_s(),
+                       arch.control_latency_s(),
+                       sim._recv_latency(size),
+                       sim._recv_latency(reply_size),
+                       sim._proc_s]))
+    sizes = dict(nP=nP, nC=nC, M=M, G=G, nGen=nGen, N=N, Np=Np, L=L,
+                 n_jit=(4 if feedback else 2) * S_max + 1,
+                 mem_id=mem_id, valid=valid)
+    return WaveStatic(meta=meta, xs=xs, inv=inv_arrays, sizes=sizes)
+
+
+def draw_jitter(sim: VectorizedStreamSim, ws: WaveStatic) -> dict:
+    """Per-lane jitter draws for every (generation, slot, member), from
+    the engine's per-seed streams.  One flat draw per lane in a fixed
+    layout keeps each lane's realization independent of how many other
+    lanes are stacked (lane-addition inertness by construction).
+    Returned pre-shifted per pipeline leg, ready to merge into ``xs``."""
+    s, m = ws.sizes, ws.meta
+    j = sim.p.jitter
+    raw = np.zeros((s["nGen"], s["n_jit"], s["Np"], s["L"]))
+    if j:
+        for lane, rng in enumerate(sim._rngs):
+            raw[..., lane] = rng.uniform(
+                -j, j, size=(s["nGen"], s["n_jit"], s["Np"]))
+    nSteps = m["nSteps"]
+
+    def shift(a: np.ndarray, by: int) -> np.ndarray:
+        out = np.zeros((nSteps,) + a.shape[1:])
+        out[by:by + s["nGen"]] = a
+        return out
+
+    S = m["S_max"]
+    jit = dict(pub_jit=shift(raw[:, :S], 0),
+               del_jit=shift(raw[:, S:2 * S], 1 + m["dlag"]),
+               proc_jit=shift(raw[:, 2 * S], 1 + m["dlag"]))
+    if m["feedback"]:
+        jit["rp_jit"] = shift(raw[:, 2 * S + 1:3 * S + 1],
+                              1 + m["delay"])
+        jit["rd_jit"] = shift(raw[:, 3 * S + 1:], 2 + m["delay"])
+    return jit
+
+
+# ---------------------------------------------------------------------------
+# Backend ops
+# ---------------------------------------------------------------------------
+
+
+class _NumpyOps:
+    """Reference backend: the same step function run as a plain Python
+    loop — the step-for-step oracle for the device program."""
+
+    xp = np
+
+    @staticmethod
+    def lexsort(keys: tuple) -> np.ndarray:
+        return np.lexsort(keys)
+
+    @staticmethod
+    def cummax(x: np.ndarray) -> np.ndarray:
+        return np.maximum.accumulate(x, axis=0)
+
+    @staticmethod
+    def seg_cummax(x: np.ndarray, start: np.ndarray) -> np.ndarray:
+        out = x.copy()
+        for i in range(1, x.shape[0]):
+            if not start[i]:
+                out[i] = np.maximum(out[i - 1], x[i])
+        return out
+
+    @staticmethod
+    def at_set(arr, idx, vals):
+        out = arr.copy()
+        out[idx] = vals
+        return out
+
+    @staticmethod
+    def at_max(arr, idx, vals):
+        out = arr.copy()
+        np.maximum.at(out, idx, vals)
+        return out
+
+    @staticmethod
+    def scan(step: Callable, carry: Any, xs: dict, n: int
+             ) -> tuple[Any, dict]:
+        ys_all: dict = {}
+        for g in range(n):
+            carry, ys = step(carry, {k: v[g] for k, v in xs.items()})
+            for k, v in ys.items():
+                ys_all.setdefault(k, []).append(v)
+        return carry, {k: np.stack(v) for k, v in ys_all.items()}
+
+
+def _jax_ops() -> Any:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    class _JaxOps:
+        xp = jnp
+
+        @staticmethod
+        def lexsort(keys: tuple):
+            return jnp.lexsort(keys)
+
+        @staticmethod
+        def cummax(x):
+            return lax.cummax(x, axis=0)
+
+        @staticmethod
+        def seg_cummax(x, start):
+            s = start.reshape(start.shape + (1,) * (x.ndim - 1))
+
+            def comb(l, r):
+                xl, sl = l
+                xr, sr = r
+                return (jnp.where(sr, xr, jnp.maximum(xl, xr)), sl | sr)
+            y, _ = lax.associative_scan(
+                comb, (x, jnp.broadcast_to(s, x.shape)))
+            return y
+
+        @staticmethod
+        def at_set(arr, idx, vals):
+            return arr.at[idx].set(vals)
+
+        @staticmethod
+        def at_max(arr, idx, vals):
+            return arr.at[idx].max(vals)
+
+        @staticmethod
+        def scan(step, carry, xs, n):
+            return lax.scan(lambda c, x: step(c, x), carry, xs, length=n)
+
+    return _JaxOps
+
+
+# ---------------------------------------------------------------------------
+# The wave program (backend-generic)
+# ---------------------------------------------------------------------------
+
+
+def _serve_leg(ops: Any, free: Array, a: Array, hold: Array,
+               kind: Array, rid: Array, lat: Array, valid: Array,
+               side: Array, meta: dict, chain_base: Array,
+               k_arr: Array) -> tuple:
+    """FIFO-serve one aligned path slot for all members: segmented
+    closed-form scans over (resource chain)-grouped members, with
+    earliest-free pool server interleaving and cross-generation carries.
+
+    ``free``: ``(2*NCH+1, L)`` per-chain busy-until carries (last row
+    is the dummy chain absorbing latency-only/invalid members).  Each
+    resource has TWO chain copies, one per traffic *direction*
+    (``side`` 0: ingress-bound publish/reply-publish, 1: egress-bound
+    delivery/reply-delivery).  Same-direction flows genuinely contend
+    at the saturated gateway pipes and have comparable clock lags, so
+    they share a FIFO chain; cross-direction sharing only happens at
+    many-server fabric internals whose real contention is negligible —
+    and a shared busy-until carry there would *invent* contention,
+    because it cannot represent the idle gap between the two
+    directions' disjoint usage windows.  Returns ``(free', t_out)``."""
+    xp = ops.xp
+    NCH = meta["NCH"]
+    dummy = 2 * NCH
+    idx = xp.arange(a.shape[0])      # combined (multi-leg) member axis
+    is_res = (kind > 0) & valid
+    pilot = xp.where(is_res, a[:, 0], _INF)
+    # latency-only / invalid members get unique singleton chains past
+    # the resource id space so the segmented scan leaves them alone
+    rid_key = xp.where(is_res, rid + side * meta["NR"],
+                       2 * meta["NR"] + idx)
+    # pool-carry ordering: vectorized serves each pool with its carries
+    # sorted by the pilot lane ascending (earliest-free server first)
+    for (b, kk) in meta["pools"]:
+        for off in (0, NCH):
+            sub = free[b + off:b + off + kk]
+            order = ops.lexsort((xp.arange(kk), sub[:, 0]))
+            free = ops.at_set(free, xp.arange(b + off, b + off + kk),
+                              sub[order])
+    # stage 1: group by (resource, direction), pilot-arrival order
+    # within the group
+    o1 = ops.lexsort((idx, pilot, rid_key))
+    rk1, a1 = rid_key[o1], a[o1]
+    start1 = xp.concatenate([xp.ones(1, dtype=bool), rk1[1:] != rk1[:-1]])
+    segfirst = ops.cummax(xp.where(start1, idx, -1))
+    pos = idx - segfirst
+    k1 = k_arr[xp.clip(rid[o1], 0, meta["NR"] - 1)]
+    server = xp.where(is_res[o1], pos % k1, 0)
+    chain = xp.where(is_res[o1],
+                     chain_base[xp.clip(rid[o1], 0, meta["NR"] - 1)]
+                     + server + side[o1] * NCH, dummy)
+    chain_key = xp.where(is_res[o1], chain, dummy + 1 + idx)
+    # stage 2: make each chain contiguous, preserving pilot order
+    o2 = ops.lexsort((idx, chain_key))
+    a2, chain2, chkey2 = a1[o2], chain[o2], chain_key[o2]
+    h2 = hold[o1][o2]
+    res2 = is_res[o1][o2]
+    start2 = xp.concatenate([xp.ones(1, dtype=bool),
+                             chkey2[1:] != chkey2[:-1]])
+    carry = free[chain2]
+    a_eff = xp.where(res2[:, None], xp.maximum(a2, carry), a2)
+    # segmented FIFO closed form: e = H + segcummax(a - (H - h))
+    c = xp.cumsum(h2, axis=0)
+    basefill = ops.cummax(xp.where(start2[:, None], c - h2, -_INF))
+    Hs = c - basefill
+    e2 = Hs + ops.seg_cummax(a_eff - (Hs - h2), start2)
+    free = ops.at_max(free, xp.where(res2, chain2, dummy), e2)
+    perm = o1[o2]
+    t_out = ops.at_set(xp.zeros_like(a), perm, e2 + lat[perm][:, None])
+    return free, t_out
+
+
+def _transit(ops: Any, free: Array, t: Array, slots: Array, jit: Array,
+             valid: Array, side: Array, meta: dict, chain_base: Array,
+             k_arr: Array) -> tuple:
+    """Walk members through an aligned path: ``slots`` is
+    ``(S, Np, 4)`` rows of (kind, rid, hold_base, lat)."""
+    xp = ops.xp
+    S = slots.shape[0]
+    for s in range(S):
+        kind = slots[s, :, 0].astype(xp.int64)
+        rid = slots[s, :, 1].astype(xp.int64)
+        hold = xp.where((kind > 0) & valid,
+                        slots[s, :, 2], 0.0)[:, None] * (1.0 + jit[s])
+        free, t = _serve_leg(ops, free, t, hold, kind, rid,
+                             slots[s, :, 3], valid, side, meta,
+                             chain_base, k_arr)
+    return free, t
+
+
+def _next_boundary(ops: Any, boundary: Array, start: Array,
+                   Np: int) -> Array:
+    """Index of the nearest boundary at or after each position within
+    its segment (exists: segment ends are always boundaries)."""
+    xp = ops.xp
+    idx = xp.arange(Np)
+    end = xp.concatenate([start[1:], xp.ones(1, dtype=bool)])
+    r = xp.where(boundary, idx, _IBIG)[::-1]
+    nb_rev = -ops.seg_cummax(-r, end[::-1])
+    return nb_rev[::-1]
+
+
+def _pump_assign_xla(ops: Any, ring: Array, t_ready: Array, gid: Array,
+                     base_cnt: Array, idx_on: Array, valid: Array,
+                     meta: dict) -> Array:
+    """XLA fallback for the pump window assignment: gate each message on
+    the prefetch ring of its assigned consumer and clamp the depart.
+    ``gid``: consumer id per member; ``idx_on``: the message's index in
+    its consumer's total delivery order."""
+    xp = ops.xp
+    P = meta["P"]
+    gate = ring[gid, idx_on % P]
+    gate = xp.where((idx_on >= P)[:, None] & valid[:, None], gate, 0.0)
+    return xp.maximum(t_ready, gate)
+
+
+def _pump_assign_pallas(ring: Array, t_ready: Array, gid: Array,
+                        idx_on: Array, valid: Array, P: int,
+                        interpret: bool) -> Array:
+    """Pallas port of the pump window assignment (single-block kernel,
+    in-kernel ``fori_loop`` over members, VMEM-resident prefetch ring).
+    Semantically identical to :func:`_pump_assign_xla`."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    Np, L = t_ready.shape
+
+    def kernel(ring_ref, t_ref, gid_ref, idx_ref, valid_ref, out_ref):
+        def body(m, _):
+            gidm = gid_ref[m]
+            idxm = idx_ref[m]
+            gate = ring_ref[gidm, idxm % P]
+            use = (idxm >= P) & valid_ref[m]
+            gate = jnp.where(use, gate, jnp.zeros_like(gate))
+            out_ref[m, :] = jnp.maximum(t_ref[m, :], gate)
+            return 0
+        jax.lax.fori_loop(0, Np, body, 0)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((Np, L), t_ready.dtype),
+        interpret=interpret,
+    )(ring, t_ready, gid, idx_on, valid)
+
+
+def _seg_pos(ops: Any, key_sorted: Array, Np: int) -> tuple:
+    """(segment-start flags, position within segment) for a sorted
+    integer key array."""
+    xp = ops.xp
+    idx = xp.arange(Np)
+    start = xp.concatenate([xp.ones(1, dtype=bool),
+                            key_sorted[1:] != key_sorted[:-1]])
+    pos = idx - ops.cummax(xp.where(start, idx, -1))
+    return start, pos
+
+
+def _wave_step(ops: Any, meta: dict, inv: dict, carry: dict, x: dict,
+               pump: Callable) -> tuple[dict, dict]:
+    """One *pipelined* scan step.
+
+    Step ``g`` publishes generation ``g``, delivers ``g-1``,
+    reply-publishes ``g-2`` and reply-delivers ``g-3`` — mirroring the
+    engines' steady state, where all four flows are concurrently in
+    flight with exactly these generation offsets.  Every leg's arrivals
+    are known at step entry (hand-off rides the ``pend_*`` carries), so
+    all four transits run as ONE combined serve over a concatenated
+    member axis: shared resources see the competing flows in true
+    arrival order, not phase-convoy order — the property that keeps
+    throughput and RTT inside the parity bands.  Scan length is
+    ``nGen`` plus the pipeline depth, shifted validity masks draining
+    the tail."""
+    xp = ops.xp
+    Np, L, P, B = meta["Np"], meta["L"], meta["P"], meta["B"]
+    nC, nP, fb = meta["nC"], meta["nP"], meta["feedback"]
+    flush, ctrl, recv_req, recv_rep, proc_s = (inv["scal"][i]
+                                               for i in range(5))
+    idx = xp.arange(Np)
+
+    # ---- per-leg arrivals (all independent at step entry) -------------
+    # publish(g): confirm-window admission gates + client flush
+    v_pub, pr = x["pub_valid"], x["pub_pr"]
+    gate = carry["conf"][pr, x["pub_conf_slot"]]
+    gate = xp.where(x["pub_has_gate"][:, None], gate, 0.0)
+    pub_start = xp.where(v_pub[:, None], gate + flush, _INF)
+
+    # delivery(g-1): pump window assignment — per-queue arrival-order
+    # round robin with prefetch-ring gates (the Pallas-ported step)
+    v_del, q = x["del_valid"], x["del_q"]
+    dlyp = x["dlyp"]
+    t_enq_prev = carry["pend_pub"]["t_enq"][dlyp]
+    pub_start_prev = carry["pend_pub"]["pub_start"][dlyp]
+    oq = ops.lexsort((idx, xp.where(v_del, t_enq_prev[:, 0], _INF),
+                      xp.where(v_del, q, meta["nq"])))
+    q_s = q[oq]
+    _, posq = _seg_pos(ops, xp.where(v_del[oq], q_s, meta["nq"]), Np)
+    kqv = inv["kq"][xp.clip(q_s, 0, meta["nq"] - 1)]
+    slot_c = (x["del_cnt_q"][xp.clip(q_s, 0, meta["nq"] - 1)]
+              + posq) % kqv
+    cons_s = inv["q_cons_tab"][xp.clip(q_s, 0, meta["nq"] - 1), slot_c]
+    idx_on_c = x["del_cnt_c"][cons_s] + posq // kqv
+    depart_s = pump(carry["ack"], t_enq_prev[oq], cons_s, idx_on_c,
+                    v_del[oq], meta)
+    cons = ops.at_set(xp.zeros(Np, dtype=cons_s.dtype), oq, cons_s)
+    idxc = ops.at_set(xp.zeros(Np, dtype=idx_on_c.dtype), oq, idx_on_c)
+    slotc = ops.at_set(xp.zeros(Np, dtype=slot_c.dtype), oq, slot_c)
+    depart = ops.at_set(xp.zeros_like(t_enq_prev), oq, depart_s)
+    depart = xp.where(v_del[:, None], depart, _INF)
+
+    # ---- combined transit: all legs, one serve per aligned slot -------
+    blocks = [
+        (pub_start, v_pub,
+         xp.swapaxes(inv["pub_tab"][x["pub_ci"]], 0, 1), x["pub_jit"]),
+        (depart, v_del,
+         xp.swapaxes(inv["del_tab"][q, slotc], 0, 1), x["del_jit"]),
+    ]
+    if fb:
+        # the delivery->reply delay line: slot ``dly`` holds the entry
+        # written ``delay`` steps ago (generation g-1-delay), which is
+        # exactly the generation this step reply-publishes
+        dly = x["dly"]
+        pend_b = {k: v[dly] for k, v in carry["pend_del"].items()}
+        pend_c = carry["pend_rep"]
+        v_rp, rp_pr = x["rp_valid"], x["rp_pr"]
+        v_rd, rd_pr = x["rd_valid"], x["rd_pr"]
+        blocks.append(
+            (pend_b["seen"], v_rp,
+             xp.swapaxes(inv["rp_tab"][xp.clip(pend_b["cons"], 0,
+                                               nC - 1), rp_pr], 0, 1),
+             x["rp_jit"]))
+        blocks.append(
+            (pend_c["rdep"], v_rd,
+             xp.swapaxes(inv["rd_tab"][rd_pr], 0, 1), x["rd_jit"]))
+    a_c = xp.concatenate([b[0] for b in blocks], axis=0)
+    v_c = xp.concatenate([b[1] for b in blocks], axis=0)
+    slots_c = xp.concatenate([b[2] for b in blocks], axis=1)
+    jit_c = xp.concatenate([b[3] for b in blocks], axis=1)
+    # direction per block: publish/reply-publish are ingress-bound (0),
+    # delivery/reply-delivery egress-bound (1)
+    side_c = xp.concatenate(
+        [xp.full(Np, s, dtype=xp.int64)
+         for s in ((0, 1, 0, 1) if fb else (0, 1))])
+    free, t_c = _transit(ops, carry["free"], a_c, slots_c, jit_c, v_c,
+                         side_c, meta, inv["chain_base"], inv["k_arr"])
+    t_enq = t_c[:Np]
+    t_land = t_c[Np:2 * Np]
+
+    # ---- publish(g) epilogue: confirms feed the admission ring --------
+    confirms = t_enq + ctrl
+    conf = ops.at_set(carry["conf"], (pr, x["pub_conf_slot"]), confirms)
+
+    # ---- delivery(g-1) epilogue: consumer processing + batched acks ---
+    a = t_land + recv_req
+    h = (xp.where(v_del, proc_s, 0.0)[:, None] * (1.0 + x["proc_jit"]))
+    ch = xp.where(v_del, cons, nC)
+    oc = ops.lexsort((idx, xp.where(v_del, a[:, 0], _INF), ch))
+    ch_s = ch[oc]
+    start_c, posc = _seg_pos(ops, ch_s, Np)
+    carry_pf = carry["proc"][ch_s]
+    a_eff = xp.where((ch_s < nC)[:, None],
+                     xp.maximum(a[oc], carry_pf), a[oc])
+    h_s = h[oc]
+    c = xp.cumsum(h_s, axis=0)
+    basefill = ops.cummax(xp.where(start_c[:, None], c - h_s, -_INF))
+    Hs = c - basefill
+    seen_s = Hs + ops.seg_cummax(a_eff - (Hs - h_s), start_c)
+    proc = ops.at_max(carry["proc"], ch_s, seen_s)
+    seen = ops.at_set(xp.zeros_like(a), oc, seen_s)
+    seen = xp.where(v_del[:, None], seen, _INF)
+    # acks: batch every B in processing order, force-flush at
+    # generation end; invalid members route to the dummy ring row nC
+    # (valid slots within a generation are distinct: load < P)
+    boundary = ((((posc + 1) % B) == 0)
+                | xp.concatenate([start_c[1:], xp.ones(1, dtype=bool)]))
+    nb = _next_boundary(ops, boundary | (ch_s >= nC), start_c, Np)
+    ack = ops.at_set(carry["ack"], (ch_s, idxc[oc] % P),
+                     seen_s[nb] + ctrl)
+
+    ys = dict(pub_start=pub_start, confirms=confirms, depart=depart,
+              seen=seen)
+    carry = dict(
+        carry, free=free, conf=conf, proc=proc, ack=ack,
+        pend_pub=dict(
+            t_enq=ops.at_set(carry["pend_pub"]["t_enq"], dlyp, t_enq),
+            pub_start=ops.at_set(carry["pend_pub"]["pub_start"], dlyp,
+                                 pub_start)))
+    if not fb:
+        ys["rtt"] = xp.full_like(seen, _INF)
+        return carry, ys
+
+    # ---- reply-publish(g-2) epilogue: per-producer reply pump ---------
+    t_renq = t_c[2 * Np:3 * Np]
+    pch = xp.where(v_rp, rp_pr, nP)
+    opr = ops.lexsort((idx, xp.where(v_rp, t_renq[:, 0], _INF), pch))
+    pr_s = pch[opr]
+    _, posp = _seg_pos(ops, pr_s, Np)
+    idx_on_p = x["rp_cnt_p"][pr_s] + posp
+    rdep_s = pump(carry["prep"], t_renq[opr], pr_s, idx_on_p,
+                  v_rp[opr], meta)
+    rdep = ops.at_set(xp.zeros_like(t_renq), opr, rdep_s)
+    rdep = xp.where(v_rp[:, None], rdep, _INF)
+    idxp = ops.at_set(xp.zeros(Np, dtype=idx_on_p.dtype), opr, idx_on_p)
+
+    # ---- reply-delivery(g-3) epilogue: RTTs + producer ack batching ---
+    t_seen = t_c[3 * Np:] + recv_rep
+    rtt = xp.where(v_rd[:, None], t_seen - pend_c["pub_start"], _INF)
+    pch_d = xp.where(v_rd, rd_pr, nP)
+    opd = ops.lexsort((idx, xp.where(v_rd, t_seen[:, 0], _INF), pch_d))
+    pd_s = pch_d[opd]
+    start_p, posd = _seg_pos(ops, pd_s, Np)
+    boundary = ((((posd + 1) % B) == 0)
+                | xp.concatenate([start_p[1:], xp.ones(1, dtype=bool)]))
+    nb = _next_boundary(ops, boundary | (pd_s >= nP), start_p, Np)
+    prep = ops.at_set(carry["prep"],
+                      (pd_s, pend_c["idx_on_p"][opd] % P),
+                      t_seen[opd][nb] + ctrl)
+
+    ys["rtt"] = rtt
+    new_b = dict(seen=seen, cons=cons, pub_start=pub_start_prev)
+    carry = dict(
+        carry, prep=prep,
+        pend_del={k: ops.at_set(carry["pend_del"][k], dly, new_b[k])
+                  for k in new_b},
+        pend_rep=dict(rdep=rdep, idx_on_p=idxp,
+                      pub_start=pend_b["pub_start"]))
+    return carry, ys
+
+
+def _init_carry(xp: Any, meta: dict) -> dict:
+    # trailing dummy rows/slots absorb the masked writes of invalid
+    # pad members: conf slot W, ack row nC, proc row nC, prep row nP
+    L, Np = meta["L"], meta["Np"]
+    return dict(
+        free=xp.zeros((2 * meta["NCH"] + 1, L)),
+        conf=xp.zeros((meta["nP"], meta["W"] + 1, L)),
+        ack=xp.zeros((meta["nC"] + 1, meta["P"], L)),
+        proc=xp.zeros((meta["nC"] + 1, L)),
+        prep=xp.zeros((meta["nP"] + 1, meta["P"], L)),
+        # delay-line rings: publish->delivery trails by 1+dlag steps,
+        # delivery->reply-publish by ``ring`` steps; slot = step % len
+        pend_pub=dict(t_enq=xp.zeros((1 + meta["dlag"], Np, L)),
+                      pub_start=xp.zeros((1 + meta["dlag"], Np, L))),
+        pend_del=dict(seen=xp.zeros((meta["ring"], Np, L)),
+                      cons=xp.zeros((meta["ring"], Np),
+                                    dtype=xp.int64),
+                      pub_start=xp.zeros((meta["ring"], Np, L))),
+        pend_rep=dict(rdep=xp.zeros((Np, L)),
+                      idx_on_p=xp.zeros(Np, dtype=xp.int64),
+                      pub_start=xp.zeros((Np, L))))
+
+
+def run_wave_trace(ws: WaveStatic, jitter: dict,
+                   backend: str = "jax") -> dict:
+    """Run the wave program, returning the full per-step trace
+    ``{pub_start, confirms, depart, seen, rtt}`` with leading axis
+    ``nSteps`` — the step-for-step comparison surface for the property
+    tests.  ``backend="numpy"`` runs the same step as a Python loop."""
+    meta = dict(ws.meta)
+    if backend == "numpy":
+        ops: Any = _NumpyOps
+        inv = ws.inv
+        xs = dict(ws.xs, **jitter)
+
+        def pump(ring, t, gid, idxo, v, m):
+            return _pump_assign_xla(ops, ring, t, gid, None, idxo, v, m)
+        _, ys = ops.scan(
+            lambda c, x: _wave_step(ops, meta, inv, c, x, pump),
+            _init_carry(np, meta), xs, meta["nSteps"])
+        return ys
+    return _run_jax(ws, jitter)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_program(sig: tuple, meta_items: tuple, n_cells: bool
+                      ) -> Callable:
+    """Jit (once per static signature / shape bucket) the whole-run
+    program; ``n_cells`` selects the vmap-over-cells variant."""
+    import jax
+    from jax.experimental import enable_x64
+
+    ops = _jax_ops()
+    meta = dict(meta_items)
+    meta["pools"] = tuple(meta["pools"])
+    mode = pallas_enabled()
+
+    def pump(ring, t, gid, idxo, v, m):
+        if mode:
+            return _pump_assign_pallas(ring, t, gid, idxo, v, m["P"],
+                                       interpret=(mode == "interpret"))
+        return _pump_assign_xla(ops, ring, t, gid, None, idxo, v, m)
+
+    def program(xs: dict, inv: dict, jitter: dict) -> dict:
+        xs = dict(xs, **jitter)
+        _, ys = ops.scan(
+            lambda c, x: _wave_step(ops, meta, inv, c, x, pump),
+            _init_carry(ops.xp, meta), xs, meta["nSteps"])
+        return ys
+
+    fn = jax.vmap(program) if n_cells else program
+    jfn = jax.jit(fn)
+
+    def call(*args: Any) -> Any:
+        with enable_x64():
+            return jfn(*args)
+    return call
+
+
+def _run_jax(ws: WaveStatic, jitter: dict) -> dict:
+    fn = _compiled_program(ws.signature(), _meta_key(ws.meta), False)
+    out = fn(ws.xs, ws.inv, jitter)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _meta_key(meta: dict) -> tuple:
+    return tuple(sorted((k, v if not isinstance(v, tuple) else v)
+                        for k, v in meta.items()))
+
+
+# ---------------------------------------------------------------------------
+# Result assembly + engine/campaign entry points
+# ---------------------------------------------------------------------------
+
+
+def _assemble(sim: VectorizedStreamSim, ws: WaveStatic,
+              ys: dict) -> list:
+    """Per-lane RunResults from the generation trace, through the
+    engine's own ``_result`` contract (attribution, counters, sort)."""
+    s = ws.sizes
+    nP, M, L, nGen = s["nP"], s["M"], s["L"], s["nGen"]
+    mem = s["mem_id"].ravel()
+    valid = s["valid"].ravel()
+    lanes = () if L == 1 else (L,)
+    consume_t = np.full((nP * M,) + lanes, np.nan)
+    rtts = (np.full((nP * M,) + lanes, np.nan)
+            if ws.meta["feedback"] else None)
+    pub = np.zeros((nP * M,) + lanes)
+    # de-stagger the pipelined trace: step g carries publish(g),
+    # delivery(g-1), reply-publish(g-2), reply-delivery(g-3)
+    a0 = 1 + ws.meta["dlag"]
+    seen = ys["seen"][a0:nGen + a0].reshape(-1, L)[valid]
+    consume_t[mem[valid]] = (seen if lanes else seen[:, 0])
+    ps = ys["pub_start"][:nGen].reshape(-1, L)[valid]
+    pub[mem[valid]] = (ps if lanes else ps[:, 0])
+    if rtts is not None:
+        d = 2 + ws.meta["delay"]
+        rv = ys["rtt"][d:nGen + d].reshape(-1, L)[valid]
+        rtts[mem[valid]] = (rv if lanes else rv[:, 0])
+    sim.n_events = int(valid.sum()) * max(
+        1, ws.meta["S_pub"] + ws.meta["S_del"]
+        + ws.meta["S_rp"] + ws.meta["S_rd"])
+    results = []
+    for lane, seed in enumerate(sim.stack_seeds):
+        lane_spec = dataclasses.replace(
+            sim.spec, params=dataclasses.replace(sim.p, seed=seed))
+        sel = (slice(None),) if L == 1 else (slice(None), lane)
+        results.append(sim._result(
+            lane_spec, consume_t[sel],
+            rtts[sel] if rtts is not None else None,
+            pub[sel], lane=lane))
+    return results
+
+
+def run_wave_results(sim: VectorizedStreamSim) -> list:
+    """Whole-run device execution for one (possibly lane-stacked)
+    engine instance; one RunResult per stacked seed-lane."""
+    ws = build_static(sim)
+    ys = _run_jax(ws, draw_jitter(sim, ws))
+    return _assemble(sim, ws, ys)
+
+
+def run_wave_cells(sims: list) -> list:
+    """vmap-over-cells driver: batch structurally identical cells
+    (same :meth:`WaveStatic.signature`) into one device program, pow2
+    pad-and-mask on the cell axis (pads replicate cell 0 and are
+    dropped — inertness is property-tested).  Returns, per sim, the
+    per-lane RunResult list."""
+    import jax.numpy as jnp  # noqa: F401  (jax required here)
+    built = [(sim, build_static(sim)) for sim in sims]
+    out: list = [None] * len(sims)
+    groups: dict = {}
+    for i, (sim, ws) in enumerate(built):
+        groups.setdefault(ws.signature(), []).append(i)
+    for sig, idxs in groups.items():
+        if len(idxs) == 1:
+            i = idxs[0]
+            sim, ws = built[i]
+            out[i] = _assemble(sim, ws, _run_jax(ws, draw_jitter(sim, ws)))
+            continue
+        C = len(idxs)
+        Cp = 1 << max(0, C - 1).bit_length()
+        pad = [idxs[0]] * (Cp - C)
+        cells = idxs + pad
+        ws0 = built[idxs[0]][1]
+        xs = {k: np.stack([built[i][1].xs[k] for i in cells])
+              for k in ws0.xs}
+        inv = {k: np.stack([built[i][1].inv[k] for i in cells])
+               for k in ws0.inv}
+        draws = [draw_jitter(built[i][0], built[i][1]) for i in cells]
+        jit = {k: np.stack([d[k] for d in draws]) for k in draws[0]}
+        fn = _compiled_program(sig, _meta_key(ws0.meta), True)
+        ys = fn(xs, inv, jit)
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+        for c, i in enumerate(idxs):
+            sim, ws = built[i]
+            out[i] = _assemble(sim, ws, {k: v[c] for k, v in ys.items()})
+    return out

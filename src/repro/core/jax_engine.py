@@ -48,7 +48,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.simulator import ENGINES, ExperimentSpec
+from repro.core.simulator import ENGINES, ExperimentSpec, RunResult
 from repro.core.vectorized import VectorizedStreamSim
 
 
@@ -321,6 +321,31 @@ class JaxStreamSim(VectorizedStreamSim):
                 "engine='vectorized' (run_many falls back automatically)")
         self._K = _kernels()
         super().__init__(*args, **kwargs)
+
+    # -- whole-run device program (opt-in; repro.core.jax_device_loop) -----
+    def _use_device_loop(self) -> bool:
+        """True when ``params.jax_device_loop`` requests the whole-run
+        device program *and* this cell is wave-formulated.  Off by
+        default: the device loop trades the cohort engines' event
+        ordering for one fused ``lax.scan``, so it matches them at the
+        ``device_loop.*`` parity bands instead of bit-for-bit."""
+        if not self.p.jax_device_loop:
+            return False
+        from repro.core import jax_device_loop
+        ok, _why = jax_device_loop._device_loop_ok(self)
+        return ok
+
+    def run(self) -> RunResult:
+        if self._use_device_loop():
+            from repro.core import jax_device_loop
+            return jax_device_loop.run_wave_results(self)[0]
+        return super().run()
+
+    def run_stacked(self) -> list[RunResult]:
+        if self._use_device_loop():
+            from repro.core import jax_device_loop
+            return jax_device_loop.run_wave_results(self)
+        return super().run_stacked()
 
     # -- masked depart store (replaces the per-lane heaps) -----------------
     def _queue_state(self, qkey: tuple, consumers: list[int],

@@ -46,6 +46,15 @@ PARITY_BANDS: dict[str, float] = {
     # multi-tenant cells, all three deployment archs, both isolations
     "multi_tenant.all.summary": 0.05,
     "multi_tenant.all.tenant_throughput": 0.08,
+    # whole-run device program (jax_device_loop=True) vs the
+    # vectorized cohort loop: the wave schedule is a static pipeline,
+    # so these are modeling bands, not arithmetic-noise bands.  They
+    # apply only inside the supported regime (the
+    # ``_device_loop_ok`` gate in repro.core.jax_device_loop);
+    # gated cells fall back to the per-cohort path and carry the
+    # ordinary engine bands instead
+    "device_loop.all.throughput": 0.06,
+    "device_loop.all.median_rtt": 0.05,
     # stacked seed-lanes (campaign layer): non-pilot lanes vs solo runs
     "stacked.lanes.summary": 0.02,
     # stacked overflow-regime lanes vs their own solo *heap* runs

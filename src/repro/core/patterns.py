@@ -380,6 +380,31 @@ def deployment_feasibility(archs: Sequence[str] = DEPLOYMENT_ARCHS,
                             crossover_utilization=cu)
 
 
+def pattern_spec(pattern: str, arch: str, workload: str | Workload,
+                 n_consumers: int, *,
+                 total_messages: int = 8192,
+                 seed: int = 0,
+                 engine: Optional[str] = None,
+                 **param_overrides: Any) -> ExperimentSpec:
+    """The fully-resolved :class:`ExperimentSpec` for one (pattern, arch,
+    workload, consumer-count) run — the single spec construction behind
+    :func:`run_pattern` and the bench cache's engine resolution
+    (``benchmarks.common``), so pattern-implied defaults (single
+    broadcast producer, gather reply factor) resolve identically in the
+    run and in its cache key."""
+    wl = get_workload(workload) if isinstance(workload, str) else workload
+    if engine is not None:
+        param_overrides.setdefault("engine", engine)
+    n_producers = 1 if pattern.startswith("broadcast") else n_consumers
+    if pattern == "broadcast_gather" and "reply_factor" not in param_overrides:
+        param_overrides["reply_factor"] = GATHER_REPLY_FACTOR
+    return ExperimentSpec(
+        pattern=pattern, workload=wl, arch=arch,
+        n_producers=n_producers, n_consumers=n_consumers,
+        total_messages=total_messages,
+        params=_params(seed, **param_overrides))
+
+
 def run_pattern(pattern: str, arch: str, workload: str | Workload,
                 n_consumers: int, *,
                 total_messages: int = 8192,
@@ -399,19 +424,12 @@ def run_pattern(pattern: str, arch: str, workload: str | Workload,
     :mod:`repro.core.vectorized`) or ``"heap"`` (the exact one-event-per-
     message-hop reference).  ``None`` uses ``SimParams.engine``'s default.
     """
-    wl = get_workload(workload) if isinstance(workload, str) else workload
-    if engine is not None:
-        param_overrides.setdefault("engine", engine)
-    n_producers = 1 if pattern.startswith("broadcast") else n_consumers
-    if pattern == "broadcast_gather" and "reply_factor" not in param_overrides:
-        param_overrides["reply_factor"] = GATHER_REPLY_FACTOR
     results = []
     for r in range(n_runs):
-        spec = ExperimentSpec(
-            pattern=pattern, workload=wl, arch=arch,
-            n_producers=n_producers, n_consumers=n_consumers,
-            total_messages=total_messages,
-            params=_params(seed + 1000 * r, **param_overrides))
+        spec = pattern_spec(pattern, arch, workload, n_consumers,
+                            total_messages=total_messages,
+                            seed=seed + 1000 * r, engine=engine,
+                            **param_overrides)
         if cal is not None or inventory is not None:
             from repro.core.architectures import make_architecture
             inv = inventory or ClusterInventory()

@@ -92,6 +92,15 @@ class SimParams:
     #: the number of concurrent flows grows) and shrinks alongside
     #: ``vec_round`` under detected saturation.
     vec_horizon_s: Optional[float] = None
+    #: jax engine: *request* the whole-run device program (one
+    #: ``lax.scan`` over message generations instead of the Python
+    #: cohort loop; see :mod:`repro.core.jax_device_loop`).  True uses
+    #: it when the cell is wave-formulated (work_sharing/feedback, no
+    #: flow-control events reachable) and silently keeps the ordinary
+    #: per-cohort jax path otherwise; None/False (default) never uses
+    #: it.  Device-loop results match the cohort engines at the
+    #: ``device_loop.*`` parity bands rather than bit-for-bit.
+    jax_device_loop: Optional[bool] = None
 
     def __post_init__(self) -> None:
         # resolve the engine name early so a typo fails at construction,

@@ -1963,6 +1963,7 @@ def run_many(specs: Sequence[ExperimentSpec],
     from repro.core.simulator import get_engine, run_experiment
     specs = list(specs)
     results: list = [None] * len(specs)
+    deferred: list = []
     for i, spec in enumerate(specs):
         if spec.params.engine == "jax":
             from repro.core import jax_engine
@@ -2003,7 +2004,20 @@ def run_many(specs: Sequence[ExperimentSpec],
                 continue
             seeds = [specs[i].params.seed for i in chunk]
             sim = cls(specs[chunk[0]], inventory, stack_seeds=seeds)
+            if getattr(sim, "_use_device_loop", lambda: False)():
+                # whole-run device programs batch across *cells* too
+                # (vmap-over-cells; see repro.core.jax_device_loop) —
+                # defer so structurally identical grids fuse
+                deferred.append((chunk, sim))
+                continue
             for i, r in zip(chunk, sim.run_stacked()):
+                results[i] = r
+    if deferred:
+        from repro.core import jax_device_loop
+        lane_results = jax_device_loop.run_wave_cells(
+            [sim for _, sim in deferred])
+        for (chunk, _sim), rs in zip(deferred, lane_results):
+            for i, r in zip(chunk, rs):
                 results[i] = r
     return results
 

@@ -57,3 +57,67 @@ def test_versioned_cache_roundtrip_and_key_guard(tmp_path):
     with pytest.raises(LegacyCacheError, match="version prefix"):
         c2.get_or("raw-key", lambda: {})
     assert plain_key("kernels/micro").startswith("v2|")
+
+
+# ---------------------------------------------------------------------------
+# Fallback-engine resolution (the cache-poisoning regression): a jax
+# cell the run_many fallback downgrades to vectorized must be keyed as
+# vectorized — sharing the entry with the identical genuine-vectorized
+# cell — and must never occupy the jax namespace.
+# ---------------------------------------------------------------------------
+
+
+def _force_fallback(monkeypatch):
+    from repro.core import jax_engine
+    monkeypatch.setattr(jax_engine, "jax_supported",
+                        lambda spec: (False, "forced for test"))
+
+
+def test_cache_key_resolves_fallback_engine(monkeypatch):
+    from repro.core.patterns import pattern_spec
+    spec = pattern_spec("work_sharing", "dts", "dstream", 2,
+                        total_messages=8, engine="jax")
+    assert "engine=jax" in cache_key("cell", engine="jax", spec=spec)
+    _force_fallback(monkeypatch)
+    kf = cache_key("cell", engine="jax", spec=spec)
+    assert "engine=jax" not in kf
+    # key AND fingerprint match the identical genuine-vectorized cell:
+    # same computation, one cache entry
+    assert kf == cache_key("cell", engine="vectorized")
+
+
+def test_cell_key_resolves_fallback_engine(monkeypatch):
+    from repro.core.campaign import CellSpec, cell_key
+    cj = CellSpec(pattern="work_sharing", arch="dts", workload="dstream",
+                  n_consumers=2, total_messages=8, seed=0,
+                  overrides=(("engine", "jax"),))
+    cv = CellSpec(pattern="work_sharing", arch="dts", workload="dstream",
+                  n_consumers=2, total_messages=8, seed=0,
+                  overrides=(("engine", "vectorized"),))
+    assert "engine=jax" in cell_key(cj)
+    _force_fallback(monkeypatch)
+    assert cell_key(cj) == cell_key(cv)
+
+
+def test_fallback_cells_never_poison_jax_namespace(tmp_path, monkeypatch):
+    from benchmarks.common import sim_cell
+    c = Cache(str(tmp_path / "cache.json"))
+    _force_fallback(monkeypatch)
+    cell = sim_cell(c, "work_sharing", "dts", "dstream", 2, 64,
+                    engine="jax")
+    assert cell["feasible"]
+    assert all("engine=jax" not in k for k in c.data)
+    assert any("engine=vectorized" in k for k in c.data)
+    # the identical vectorized cell is a HIT on the fallback's entry
+    assert sim_cell(c, "work_sharing", "dts", "dstream", 2, 64,
+                    engine="vectorized") == cell
+    assert len(c.data) == 1
+    # once jax is genuinely available, the jax cell's key lands in the
+    # jax namespace — a cache MISS, never served the vectorized numbers
+    monkeypatch.undo()
+    from repro.core.patterns import pattern_spec
+    spec = pattern_spec("work_sharing", "dts", "dstream", 2,
+                        total_messages=64, engine="jax")
+    kj = cache_key("work_sharing|dts|dstream|2|64|1", engine="jax",
+                   spec=spec)
+    assert "engine=jax" in kj and kj not in c.data

@@ -368,3 +368,32 @@ def test_campaign_engine_validated_at_construction():
         CampaignSpec.from_json(
             CampaignSpec(name="rt").to_json().replace(
                 '"params": {}', '"params": {"engine": "typo"}'))
+
+
+def test_campaign_fallback_counted_and_warned(monkeypatch):
+    """A jax campaign in a jax-less environment runs vectorized — the
+    result must say so (n_fallback + RuntimeWarning), never silently."""
+    from repro.core import jax_engine
+    monkeypatch.setattr(jax_engine, "jax_supported",
+                        lambda spec: (False, "forced for test"))
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        consumers=(2,), n_runs=2, total_messages=64,
+                        params={"engine": "jax"})
+    with pytest.warns(RuntimeWarning, match="fell back"):
+        res = run_campaign(spec, workers=0)
+    assert res.n_fallback == len(res.cells) == 2
+    assert all(s.engine == "vectorized" for s in res.summaries)
+    blob = __import__("json").loads(res.to_json())
+    assert blob["n_fallback"] == 2
+    # and the cells are keyed under the engine that actually ran
+    assert all("engine=vectorized" in c["key"] for c in blob["cells"])
+
+
+def test_campaign_no_fallback_no_warning():
+    spec = CampaignSpec(name="t", patterns=("work_sharing",),
+                        consumers=(2,), n_runs=1, total_messages=64)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        res = run_campaign(spec, workers=0)
+    assert res.n_fallback == 0

@@ -18,7 +18,11 @@ The invariants under test, per stacked seed-lane:
 * **pilot invariance** — lane 0 of a stacked run is bit-identical to
   the solo vectorized run across sampled overflow configurations;
 * the **FIFO-scan lane axis** computes exactly the per-lane solo scans
-  (the identity every lane-threaded time array relies on).
+  (the identity every lane-threaded time array relies on);
+* **device-program backend equivalence** — the whole-run ``lax.scan``
+  wave program (:mod:`repro.core.jax_device_loop`) and its NumPy-mirror
+  step loop produce identical per-generation traces over drawn shapes,
+  seeds and jitter.
 """
 
 import numpy as np
@@ -188,6 +192,42 @@ def test_stacked_overflow_lane_invariants(engine, seeds, cap_msgs, msgs):
             # next retry instead of deferring its pilot-fixed schedule)
             assert q["hwm"][0] <= q["cap"]
             assert (q["hwm"] <= q["cap"] + q["forced"]).all()
+
+
+# -- whole-run device program: backend equivalence --------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not jax_available(), reason="jax required")
+@settings(max_examples=8, deadline=None)
+@given(pattern=st.sampled_from(("work_sharing", "feedback")),
+       npr=st.sampled_from((2, 4)),
+       msgs_per=st.sampled_from((16, 32)),
+       jitter=st.floats(min_value=0.0, max_value=0.05),
+       seed=st.integers(min_value=0, max_value=999))
+def test_device_trace_jax_matches_numpy_step_for_step(pattern, npr,
+                                                      msgs_per, jitter,
+                                                      seed):
+    """The jitted ``lax.scan`` device program and its NumPy-mirror step
+    loop (``backend="numpy"``) emit identical per-generation traces for
+    arbitrary drawn shapes, seeds and jitter — the numpy mirror is the
+    step-for-step oracle of :mod:`repro.core.jax_device_loop`, so any
+    divergence is a jit/vmap artifact, never modeling noise."""
+    from repro.core import jax_device_loop as dl
+    spec = ExperimentSpec(
+        pattern=pattern, workload=get_workload("dstream"), arch="dts",
+        n_producers=npr, n_consumers=2,
+        total_messages=npr * msgs_per,
+        params=SimParams(seed=seed, jitter=jitter))
+    sim = VectorizedStreamSim(spec)
+    ws = dl.build_static(sim)
+    jit = dl.draw_jitter(sim, ws)
+    yn = dl.run_wave_trace(ws, jit, backend="numpy")
+    yj = dl.run_wave_trace(ws, jit, backend="jax")
+    assert set(yn) == set(yj)
+    for k in sorted(yn):
+        np.testing.assert_allclose(yj[k], yn[k], rtol=1e-12,
+                                   atol=1e-12, err_msg=k)
 
 
 @pytest.mark.parametrize("engine", VEC_ENGINES)

@@ -208,3 +208,196 @@ def test_jax_matches_vectorized_bitwise_on_smoke_cell():
     np.testing.assert_allclose(j.rtts, v.rtts, rtol=1e-9)
     assert j.rejected_publishes == v.rejected_publishes
     assert j.blocked_confirms == v.blocked_confirms
+
+
+# -- whole-run device loop --------------------------------------------------
+# The wave device program (repro.core.jax_device_loop): one lax.scan
+# over message generations replaces the per-cohort Python event loop.
+# Contracts under test: the jit program computes exactly what its
+# NumPy-mirror step loop computes; the pow2 cell-axis padding is inert;
+# lane 0 of a stacked run is bit-identical to the solo device run; and
+# end-to-end throughput/RTT stay inside the device_loop.* parity bands
+# vs the vectorized engine.
+
+
+def _dl_spec(seed, pattern="feedback", arch="dts", msgs=256, npr=4,
+             nc=2, engine="jax", device=True, **ov):
+    # confirm_window=32 puts the default feedback cell inside the wave
+    # model's validated corridor (2G < W < msgs/producer <= 2W; see
+    # _device_loop_ok) so the dispatch-path tests exercise the device
+    # program rather than silently falling back to the cohort loop
+    ov.setdefault("confirm_window", 32)
+    return ExperimentSpec(
+        pattern=pattern, workload=get_workload("dstream"), arch=arch,
+        n_producers=npr, n_consumers=nc, total_messages=msgs,
+        params=SimParams(seed=seed, engine=engine,
+                         jax_device_loop=device, **ov))
+
+
+def _dl_sim(seed, **kw):
+    from repro.core.vectorized import VectorizedStreamSim
+    kw.setdefault("engine", "vectorized")
+    kw.setdefault("device", None)
+    return VectorizedStreamSim(_dl_spec(seed, **kw))
+
+
+@requires_jax
+@pytest.mark.parametrize("pattern", [
+    # the feedback trace needs a larger (corridor) cell — jit-compile
+    # heavy, so it rides the nightly/jax-engine jobs only
+    pytest.param("feedback", marks=pytest.mark.slow),
+    "work_sharing"])
+def test_device_loop_trace_jax_matches_numpy_mirror(pattern):
+    """The jit device program and the same step run as a Python loop
+    (backend="numpy") produce identical per-step traces — any
+    divergence is a jit/vmap artifact, never modeling noise."""
+    from repro.core import jax_device_loop as dl
+    # feedback needs a corridor cell to pass the regime gate; the
+    # work_sharing trace stays tiny for compile time
+    sim = _dl_sim(0, pattern=pattern, jitter=0.02,
+                  msgs=256 if pattern == "feedback" else 64)
+    ok, why = dl._device_loop_ok(sim)
+    assert ok, why
+    ws = dl.build_static(sim)
+    jit = dl.draw_jitter(sim, ws)
+    yn = dl.run_wave_trace(ws, jit, backend="numpy")
+    yj = dl.run_wave_trace(ws, jit, backend="jax")
+    assert set(yn) == set(yj)
+    for k in yn:
+        np.testing.assert_allclose(yj[k], yn[k], rtol=1e-12, atol=1e-12,
+                                   err_msg=k)
+
+
+@requires_jax
+@pytest.mark.slow
+def test_device_loop_cell_axis_pads_are_inert():
+    """run_wave_cells pads a 3-cell group to 4 by replicating cell 0;
+    every real cell's results are bit-identical to its solo device
+    run."""
+    from repro.core import jax_device_loop as dl
+    seeds = (0, 1, 2)
+    batched = dl.run_wave_cells(
+        [_dl_sim(s, msgs=64, jitter=0.02) for s in seeds])
+    for s, rs in zip(seeds, batched):
+        solo = dl.run_wave_results(_dl_sim(s, msgs=64, jitter=0.02))
+        assert len(rs) == len(solo) == 1
+        np.testing.assert_array_equal(rs[0].consume_times,
+                                      solo[0].consume_times)
+        np.testing.assert_array_equal(rs[0].rtts, solo[0].rtts)
+
+
+@requires_jax
+@pytest.mark.slow
+def test_device_loop_stacked_pilot_bit_identical():
+    """Lane 0 of a seed-stacked device run equals the solo device run
+    bit-for-bit (each lane draws jitter from its own seed stream)."""
+    stacked = run_many([_dl_spec(s, jitter=0.02)
+                        for s in (0, 1000, 2000)])
+    solo = run_many([_dl_spec(0, jitter=0.02)])[0]
+    assert all(summarize(r).engine == "jax" for r in stacked)
+    np.testing.assert_array_equal(stacked[0].consume_times,
+                                  solo.consume_times)
+    np.testing.assert_array_equal(stacked[0].rtts, solo.rtts)
+
+
+@requires_jax
+@pytest.mark.slow
+@pytest.mark.parametrize("pattern,arch", [
+    # feedback rides the device loop only inside its validated
+    # corridor, and only on the multi-broker archs (mss feedback is
+    # regime-gated; see test_device_loop_regime_gate)
+    ("feedback", "dts"), ("work_sharing", "prs-haproxy"),
+    ("work_sharing", "dts"), ("work_sharing", "mss")])
+def test_device_loop_parity_vs_vectorized(pattern, arch):
+    """End-to-end parity of the whole-run device program against the
+    vectorized cohort loop, inside the device_loop.* bands."""
+    from repro.core import jax_device_loop as dl
+    from repro.core.parity import band
+    ok, why = dl._device_loop_ok(
+        _dl_sim(0, pattern=pattern, arch=arch))
+    assert ok, f"cell unexpectedly regime-gated: {why}"
+    v = run_many([_dl_spec(0, pattern=pattern, arch=arch,
+                           engine="vectorized", device=None)])[0]
+    j = run_many([_dl_spec(0, pattern=pattern, arch=arch)])[0]
+    assert summarize(j).engine == "jax"
+    sv, sj = summarize(v), summarize(j)
+    thr_dev = (abs(sj.throughput_msgs_s - sv.throughput_msgs_s)
+               / sv.throughput_msgs_s)
+    assert thr_dev <= band("device_loop.all.throughput"), (
+        f"{pattern}/{arch}: thr dev {thr_dev:.4f}")
+    if pattern == "feedback":
+        rv, rj = np.median(v.rtts), np.median(j.rtts)
+        rtt_dev = abs(rj - rv) / rv
+        assert rtt_dev <= band("device_loop.all.median_rtt"), (
+            f"{pattern}/{arch}: rtt dev {rtt_dev:.4f}")
+
+
+@requires_jax
+def test_device_loop_dispatch_requires_opt_in():
+    """jax_device_loop=None (the default) keeps the cohort-loop jax
+    engine; only the explicit True flag dispatches the wave program."""
+    from repro.core import jax_device_loop as dl
+    sim = _dl_sim(0)
+    ok, why = dl._device_loop_ok(sim)
+    assert ok, why
+    j_default = run_many([_dl_spec(0, device=None)])[0]
+    v = run_many([_dl_spec(0, engine="vectorized", device=None)])[0]
+    # the cohort jax engine is a kernel port: bitwise-close to
+    # vectorized, which the wave program (different schedule) is not
+    np.testing.assert_allclose(j_default.consume_times,
+                               v.consume_times, rtol=1e-9)
+
+
+@requires_jax
+def test_pallas_pump_kernel_interpret_matches_oracle(monkeypatch):
+    """``REPRO_PALLAS=interpret`` routes the pump window assignment
+    through the Pallas kernel (interpreter mode on CPU hosts); the full
+    device trace must still match the numpy oracle exactly.  Uses a
+    shape no other test compiles, so the jit cache cannot serve a
+    non-pallas executable for this signature."""
+    from repro.core import jax_device_loop as dl
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    if dl.pallas_enabled() != "interpret":
+        pytest.skip("jax.experimental.pallas not importable")
+    sim = _dl_sim(0, pattern="work_sharing", msgs=96, jitter=0.01)
+    ws = dl.build_static(sim)
+    jit = dl.draw_jitter(sim, ws)
+    yn = dl.run_wave_trace(ws, jit, backend="numpy")
+    yj = dl.run_wave_trace(ws, jit, backend="jax")
+    for k in sorted(yn):
+        np.testing.assert_allclose(yj[k], yn[k], rtol=1e-12,
+                                   atol=1e-12, err_msg=k)
+
+
+def test_device_loop_regime_gate():
+    """The regime gate rejects every shape class whose static
+    wave schedule measurably diverges from the cohort loop, each with
+    a reason naming the offending quantity (gated cells dispatch to
+    the per-cohort path; see test_device_loop_dispatch_requires_opt_in
+    for the dispatch side)."""
+    from repro.core import jax_device_loop as dl
+
+    def why_of(**kw):
+        ok, why = dl._device_loop_ok(_dl_sim(0, **kw))
+        assert not ok
+        return why
+
+    # single-broker mss feedback: structural residuals everywhere
+    assert "mss" in why_of(arch="mss")
+    # fine generations (G < 4): p16c16 picks G=2
+    assert "too fine" in why_of(npr=16, nc=16, msgs=2048,
+                                confirm_window=64)
+    # hard window stall: W <= 2G
+    assert "window-stall" in why_of(confirm_window=16)
+    # burst regime: the window never binds (W >= msgs/producer)
+    assert "never binds" in why_of(confirm_window=128)
+    # reply-lag drift: run much longer than the window (M > 2W)
+    assert "drifts" in why_of(msgs=1024)
+    # universal run-length clause (any pattern): generation-barrier
+    # drift accumulates past 256 msgs/producer
+    assert "generation-barrier drift" in why_of(
+        pattern="work_sharing", npr=8, nc=8, msgs=4096)
+    # work_sharing carries only the run-length gate, no feedback gates
+    ok, why = dl._device_loop_ok(
+        _dl_sim(0, pattern="work_sharing", npr=16, nc=16, msgs=2048))
+    assert ok, why

@@ -126,6 +126,7 @@ class Config:
     vectorized_engine: str = "src/repro/core/vectorized.py"
     jax_engine: str = "src/repro/core/jax_engine.py"
     campaign: str = "src/repro/core/campaign.py"
+    bench_common: str = "benchmarks/common.py"
     parity_constants: str = "src/repro/core/parity.py"
     engines_doc: str = "docs/engines.md"
     parity_tests: tuple[str, ...] = (

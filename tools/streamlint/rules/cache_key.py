@@ -15,6 +15,14 @@ cache entry — silent result poisoning across resumes.
 * SL203 — ``ExperimentSpec`` field not threaded through the
   ``ExperimentSpec(...)`` construction inside ``CellSpec.experiment``
   (a spec knob campaigns could never set — and therefore never key).
+* SL204 — a cache-key builder that keys on the *requested* engine
+  instead of the *resolved* one.  ``run_many`` silently downgrades
+  unsupported jax cells to the vectorized engine; a key built before
+  that resolution caches vectorized numbers under the jax namespace
+  (poisoning later genuinely-jax runs) and forks them from the
+  identical vectorized cell.  ``campaign.cell_key`` and
+  ``benchmarks.common.resolve_engine`` must both route through
+  ``campaign.resolved_engine``.
 """
 
 from __future__ import annotations
@@ -103,6 +111,43 @@ def sl202(project: Project,
             message=(f"cell_key does not cover CellSpec field "
                      f"{field!r}; two cells differing only in it "
                      f"would collide in the cache"))
+
+
+def _calls_name(func: ast.AST, name: str) -> bool:
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func) or ""
+            if d.split(".")[-1] == name:
+                return True
+    return False
+
+
+@rule("SL204", "cache keys must be built from the resolved engine, "
+               "never the requested one")
+def sl204(project: Project,
+          scanned: list[SourceFile]) -> Iterable[Diagnostic]:
+    camp = project.file(project.config.campaign)
+    if camp is not None:
+        func = find_func(camp.tree, "cell_key")
+        if func is not None and not _calls_name(func, "resolved_engine"):
+            yield Diagnostic(
+                rule="SL204", file=camp.path, line=func.lineno,
+                message=("cell_key never calls resolved_engine: a jax "
+                         "cell the run_many fallback downgrades to "
+                         "vectorized would be cached under the jax "
+                         "namespace, poisoning later genuinely-jax "
+                         "runs"))
+    bench = project.file(project.config.bench_common)
+    if bench is not None:
+        func = find_func(bench.tree, "resolve_engine")
+        if func is not None and not _calls_name(func, "resolved_engine"):
+            yield Diagnostic(
+                rule="SL204", file=bench.path, line=func.lineno,
+                message=("benchmarks.common.resolve_engine never "
+                         "consults campaign.resolved_engine: bench "
+                         "cache keys for fallback cells would carry "
+                         "the requested engine instead of the one "
+                         "that actually ran"))
 
 
 @rule("SL203", "every ExperimentSpec field must be threaded through "
